@@ -1,0 +1,39 @@
+"""Beyond-paper ablation: WHERE to split the model between client and
+server — the paper fixes 2/2 (MLP) and 9/7 (ResNet) without exploring.
+
+Trade-off: a deeper split (more client layers) shrinks the smashed data
+(smaller activations cross the edge link) and gives clients more private
+capacity, but shrinks the shared server that aggregates across tasks.
+We sweep split_layers on the paper MLP at alpha=0 and alpha=0.45.
+
+    PYTHONPATH=src python -m benchmarks.ablation_split_point
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_algorithm
+from repro.configs import get_config
+from repro.core import comm_cost
+
+
+def run(quick: bool = False):
+    rows = []
+    steps = 200 if quick else 400
+    for alpha in ([0.0] if quick else [0.0, 0.45]):
+        for split in (1, 2, 3):
+            r = run_algorithm(
+                "paper-mlp", "mtsl", alpha=alpha, steps=steps, lr=0.1,
+                smoke=quick, cfg_overrides={"split_layers": split},
+            )
+            cfg = get_config("paper-mlp", smoke=quick).with_updates(split_layers=split)
+            per_round = comm_cost.round_cost("mtsl", cfg, cfg.num_clients, 16).total
+            rows.append((
+                f"ablation_split/alpha{alpha}/split{split}", 0.0,
+                f"acc={r.acc_mtl:.3f} smashed_dim={cfg.mlp_dims[split]} "
+                f"round_KB={per_round/1e3:.1f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

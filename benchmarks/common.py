@@ -1,0 +1,226 @@
+"""Shared benchmark harness: train each algorithm on the paper's synthetic
+multi-task setup and evaluate Accuracy_MTL (Eq. 14).
+
+Round semantics (faithful to the compared papers):
+  mtsl:     every round = ONE split-learning step (smashed data crosses).
+  splitfed: every round = `local_steps` split steps against the central
+            server, then the client parts are fed-averaged.
+  fedavg:   every round = `local_steps` LOCAL full-model steps per client,
+            then full-model averaging (client drift happens here).
+  fedem:    synchronous EM mixture (no drift — a *strong* variant; if MTSL
+            still wins, the claim holds a fortiori).
+
+Progress is tracked in gradient steps (rounds x local_steps) and in
+transmitted bytes (core/comm_cost.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import comm_cost, federation, lr_policy
+from repro.core.mtsl import TrainState, build_eval_step, build_train_step, init_state
+from repro.core.split import replicate_tower, stack_towers
+from repro.data.pipeline import client_batches
+from repro.data.synthetic import MultiTaskImageSource
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.sharding import strip
+
+ALGS = ["fedavg", "fedem", "splitfed", "mtsl"]
+LOCAL_STEPS = 100  # local epochs per round (FL drift regime, see EXPERIMENTS.md)
+
+
+@dataclass
+class RunResult:
+    algorithm: str
+    acc_mtl: float
+    acc_curve: list  # [(gradient_steps, acc)]
+    loss_curve: list
+    steps_to_acc: dict  # acc threshold -> gradient steps (or None)
+    bytes_to_acc: dict  # acc threshold -> transmitted bytes (or None)
+    wall_s: float
+
+
+def make_source(cfg, alpha: float, noise_sigma: float = 0.0, seed: int = 0):
+    return MultiTaskImageSource(
+        num_classes=cfg.num_clients, image_size=cfg.image_size,
+        channels=cfg.image_channels, alpha=alpha, noise_sigma=noise_sigma,
+        seed=seed,
+    )
+
+
+def test_batches(cfg, src, per_task: int = 64, seed: int = 123):
+    rng = np.random.default_rng(seed)
+    imgs, labs = [], []
+    for m in range(cfg.num_clients):
+        x, y = src.test_batch(rng, m, per_task)
+        imgs.append(x)
+        labs.append(y)
+    return {"image": jnp.asarray(np.stack(imgs)),
+            "label": jnp.asarray(np.stack(labs), jnp.int32)}
+
+
+def _tower_total_params(model):
+    t = strip(model.init_tower(jax.random.PRNGKey(0)))
+    s = strip(model.init_server(jax.random.PRNGKey(1)))
+    tower = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(t))
+    total = tower + sum(int(np.prod(x.shape)) for x in jax.tree.leaves(s))
+    return tower, total
+
+
+def _round_bytes(algorithm, cfg, M, b, k, tower_p, total_p):
+    if algorithm == "mtsl":
+        return comm_cost.round_cost("mtsl", cfg, M, b).total
+    if algorithm == "splitfed":
+        smashed = comm_cost.round_cost("mtsl", cfg, M, b).total * k
+        fed = comm_cost.round_cost("splitfed", cfg, M, b, tower_params=tower_p).total \
+            - comm_cost.round_cost("mtsl", cfg, M, b).total
+        return smashed + fed
+    if algorithm == "fedavg":
+        return comm_cost.round_cost("fedavg", cfg, M, b, total_params=total_p).total
+    if algorithm == "fedem":
+        return comm_cost.round_cost("fedem", cfg, M, b, total_params=total_p,
+                                    num_components=3).total
+    raise ValueError(algorithm)
+
+
+def run_algorithm(
+    arch: str,
+    algorithm: str,
+    *,
+    alpha: float = 0.0,
+    noise_sigma: float = 0.0,
+    steps: int = 300,  # total gradient steps (rounds = steps/local_steps)
+    batch_per_client: int = 16,
+    lr: float = 0.1,
+    eval_every: int = 10,  # in rounds
+    acc_thresholds=(0.5, 0.7, 0.8, 0.9),
+    seed: int = 0,
+    smoke: bool = False,
+    local_steps: int = LOCAL_STEPS,
+    cfg_overrides: dict | None = None,
+) -> RunResult:
+    cfg = get_config(arch, smoke=smoke)
+    if cfg_overrides:
+        cfg = cfg.with_updates(**cfg_overrides)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    src = make_source(cfg, alpha, noise_sigma, seed)
+    tb = test_batches(cfg, src)
+    tower_p, total_p = _tower_total_params(model)
+    rng0 = jax.random.PRNGKey(seed)
+    t0 = time.time()
+
+    if algorithm == "mtsl":
+        opt = sgd(lr)
+        params = strip(init_state(model, opt, rng0, M, "mtsl"))
+        state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+        step_fn = jax.jit(build_train_step(model, opt, M, "mtsl"))
+        clr = lr_policy.server_scaled(M, server_scale=2.0 / M)
+        ev = jax.jit(build_eval_step(model, M))
+
+        def do_round(state, batch):
+            return step_fn(state, batch, clr)
+
+        def do_eval(state):
+            return float(ev(state.params, tb)["acc_mtl"])
+
+        rounds = steps
+        steps_per_round = 1
+        per_round_batch = batch_per_client
+    elif algorithm == "splitfed":
+        params = strip({
+            "towers": replicate_tower(model.init_tower, rng0, M),
+            "server": model.init_server(jax.random.fold_in(rng0, 1)),
+        })
+        state = params
+        round_fn = jax.jit(federation.build_splitfed_round(model, lr, M, local_steps))
+        ev = jax.jit(build_eval_step(model, M))
+
+        def do_round(state, batch):
+            b = batch_per_client
+            batch = jax.tree.map(
+                lambda x: x.reshape((M, local_steps, b) + x.shape[2:]), batch)
+            return round_fn(state, batch)
+
+        def do_eval(state):
+            return float(ev(state, tb)["acc_mtl"])
+
+        rounds = max(steps // local_steps, 1)
+        steps_per_round = local_steps
+        per_round_batch = batch_per_client * local_steps
+    elif algorithm == "fedavg":
+        params = strip(federation.init_fedavg_params(model, rng0, M))
+        state = params
+        round_fn = jax.jit(federation.build_fedavg_round(model, lr, M, local_steps))
+        ev = jax.jit(federation.eval_fedavg(model, M))
+
+        def do_round(state, batch):
+            b = batch_per_client
+            batch = jax.tree.map(
+                lambda x: x.reshape((M, local_steps, b) + x.shape[2:]), batch)
+            return round_fn(state, batch)
+
+        def do_eval(state):
+            return float(ev(state, tb)["acc_mtl"])
+
+        rounds = max(steps // local_steps, 1)
+        steps_per_round = local_steps
+        per_round_batch = batch_per_client * local_steps
+    elif algorithm == "fedem":
+        comps, pi = federation.init_fedem_state(model, rng0, M, 3)
+        comps = strip(comps)
+        # round-based FedEM uses {"tower","server"} component layout
+        comps = {"tower": comps["tower"], "server": comps["server"]}
+        state = (comps, pi)
+        round_fn = jax.jit(federation.build_fedem_round(model, lr, M, 3, local_steps))
+        opt = sgd(lr)
+        ev = jax.jit(federation.build_fedem_eval_step(model, M))
+
+        def do_round(state, batch):
+            comps, pi = state
+            b = batch_per_client
+            batch = jax.tree.map(
+                lambda x: x.reshape((M, local_steps, b) + x.shape[2:]), batch)
+            comps, pi, metrics = round_fn(comps, pi, batch)
+            return (comps, pi), metrics
+
+        def do_eval(state):
+            comps, pi = state
+            st = federation.FedEMState(comps, pi, (), jnp.zeros((), jnp.int32))
+            return float(ev(st, tb)["acc_mtl"])
+
+        rounds = max(steps // local_steps, 1)
+        steps_per_round = local_steps
+        per_round_batch = batch_per_client * local_steps
+    else:
+        raise ValueError(algorithm)
+
+    per_round = _round_bytes(algorithm, cfg, M, batch_per_client, local_steps,
+                             tower_p, total_p)
+
+    acc_curve, loss_curve = [], []
+    steps_to = {a: None for a in acc_thresholds}
+    bytes_to = {a: None for a in acc_thresholds}
+    for i, batch in enumerate(
+        client_batches(src, per_round_batch, steps=rounds, seed=seed)
+    ):
+        state, metrics = do_round(state, batch)
+        loss_curve.append(float(metrics["loss"]))
+        if (i + 1) % eval_every == 0 or i == rounds - 1:
+            acc = do_eval(state)
+            gsteps = (i + 1) * steps_per_round
+            acc_curve.append((gsteps, acc))
+            for a in acc_thresholds:
+                if steps_to[a] is None and acc >= a:
+                    steps_to[a] = gsteps
+                    bytes_to[a] = (i + 1) * per_round
+    final_acc = acc_curve[-1][1] if acc_curve else float("nan")
+    return RunResult(algorithm, final_acc, acc_curve, loss_curve,
+                     steps_to, bytes_to, time.time() - t0)

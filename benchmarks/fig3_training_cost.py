@@ -1,0 +1,40 @@
+"""Paper Fig. 3: training cost — (a) steps and (b) transmitted bytes to
+reach given accuracy levels, per algorithm, at alpha=0.
+
+Expected: MTSL reaches each accuracy level in fewer steps AND fewer bytes
+(smashed-data traffic only, no federation traffic, faster convergence).
+"""
+from __future__ import annotations
+
+from benchmarks.common import ALGS, run_algorithm
+
+
+def run(quick: bool = False):
+    ls = 20 if quick else 100
+    rows = []
+    results = {}
+    for alg in ALGS:
+        steps = (400 if quick else 800) if alg == "mtsl" else (400 if quick else 4000)
+        r = run_algorithm("paper-mlp", alg, alpha=0.0, steps=steps,
+                          smoke=quick, lr=0.1, eval_every=2, local_steps=ls)
+        results[alg] = r
+        for thr in (0.5, 0.7, 0.8, 0.9):
+            st = r.steps_to_acc.get(thr)
+            by = r.bytes_to_acc.get(thr)
+            rows.append((
+                f"fig3/{alg}/acc{thr}", 0.0,
+                f"steps={st if st is not None else 'n/a'} "
+                f"MB={by / 1e6 if by else 'n/a'}",
+            ))
+    m, f = results["mtsl"], results["fedavg"]
+    thr = 0.7
+    claim_steps = (m.steps_to_acc[thr] or 10**9) <= (f.steps_to_acc[thr] or 10**9)
+    claim_bytes = (m.bytes_to_acc[thr] or 10**18) <= (f.bytes_to_acc[thr] or 10**18)
+    rows.append(("fig3/claim_fewer_steps", 0.0, "PASS" if claim_steps else "FAIL"))
+    rows.append(("fig3/claim_fewer_bytes", 0.0, "PASS" if claim_bytes else "FAIL"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,75 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement) plus
+PASS/FAIL rows for each of the paper's qualitative claims.
+
+    PYTHONPATH=src python -m benchmarks.run            # paper suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced (CI)
+    PYTHONPATH=src python -m benchmarks.run --roofline # + §Roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced configs (smoke models, fewer steps)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also run the roofline table (slow: spawns dry-runs)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table2,table3,fig2,fig3,fig4")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (ablation_split_point, fig2_lr_tuning,
+                            fig3_training_cost, fig4_robustness,
+                            table2_accuracy, table3_new_client)
+
+    suites = {
+        "fig2": fig2_lr_tuning.run,
+        "table2": table2_accuracy.run,
+        "table3": table3_new_client.run,
+        "fig3": fig3_training_cost.run,
+        "fig4": fig4_robustness.run,
+        "ablation_split": ablation_split_point.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            rows = fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            failures += 1
+            continue
+        for r in rows:
+            print(",".join(str(x) for x in r))
+            if isinstance(r[-1], str) and r[-1].startswith("FAIL"):
+                failures += 1
+        print(f"{name}/wall,{(time.time() - t0) * 1e6:.0f},s={time.time() - t0:.1f}")
+        sys.stdout.flush()
+
+    if args.roofline:
+        from benchmarks.roofline import roofline_terms
+        from repro.launch.dryrun import ASSIGNED
+
+        for arch in ASSIGNED:
+            r = roofline_terms(arch, "train_4k", verbose=False)
+            if r.get("status") == "OK":
+                print(f"roofline/{arch}/train_4k,0,"
+                      f"dominant={r['dominant']};compute_ms={r['compute_s']*1e3:.2f};"
+                      f"useful={r['useful_flops_ratio']}")
+
+    print(f"claims_failed,{failures},{'OK' if failures == 0 else 'CHECK'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Paper Table 3: add a NEW client in phase 2.
+
+Phase 1 trains with client j never seeing its own distribution (its slot is
+fed a copy of a neighbour's data — the SPMD layout keeps M fixed; noted in
+EXPERIMENTS.md). Phase 2 adds client j's real data:
+  - MTSL: ONLY the new client's tower trains (component-LR freeze mask) —
+    a fraction of the full training cost;
+  - FedAvg/SplitFed: the federation retrains everyone (round-based, with
+    local-step drift).
+Expected: MTSL keeps its large accuracy advantage (slight drop vs Table 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import LOCAL_STEPS, make_source, test_batches
+from repro.configs import get_config
+from repro.core import federation, lr_policy
+from repro.core.mtsl import TrainState, build_eval_step, build_train_step, init_state
+from repro.core.split import client_freeze_lr, replicate_tower
+from repro.data.pipeline import client_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.sharding import strip
+
+
+def _exclude(batch, j):
+    out = dict(batch)
+    M = batch["image"].shape[0]
+    for k in out:
+        out[k] = out[k].at[j].set(out[k][(j + 1) % M])
+    return out
+
+
+def run(quick: bool = False):
+    rows = []
+    arch = "paper-mlp"
+    cfg = get_config(arch, smoke=quick)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    j = M - 1  # the new client
+    ls = 20 if quick else LOCAL_STEPS
+    rounds1 = 10 if quick else 40
+    rounds2 = 5 if quick else 20
+    lr = 0.1
+    src = make_source(cfg, alpha=0.0)
+    tb = test_batches(cfg, src)
+    ev_split = jax.jit(build_eval_step(model, M))
+    accs = {}
+
+    # ---- FedAvg (round-based, both phases)
+    params = strip(federation.init_fedavg_params(model, jax.random.PRNGKey(0), M))
+    round_fn = jax.jit(federation.build_fedavg_round(model, lr, M, ls))
+    ev_fa = jax.jit(federation.eval_fedavg(model, M))
+    for phase, rounds, excl in [(1, rounds1, True), (2, rounds2, False)]:
+        for i, batch in enumerate(client_batches(src, 16 * ls, steps=rounds, seed=phase)):
+            batch = jax.tree.map(
+                lambda x: x.reshape((M, ls, 16) + x.shape[2:]), batch)
+            if excl:
+                batch = _exclude(batch, j)
+            params, _ = round_fn(params, batch)
+    accs["fedavg"] = float(ev_fa(params, tb)["acc_mtl"])
+
+    # ---- SplitFed (round-based, both phases)
+    params = strip({
+        "towers": replicate_tower(model.init_tower, jax.random.PRNGKey(0), M),
+        "server": model.init_server(jax.random.PRNGKey(1)),
+    })
+    round_fn = jax.jit(federation.build_splitfed_round(model, lr, M, ls))
+    for phase, rounds, excl in [(1, rounds1, True), (2, rounds2, False)]:
+        for i, batch in enumerate(client_batches(src, 16 * ls, steps=rounds, seed=phase)):
+            batch = jax.tree.map(
+                lambda x: x.reshape((M, ls, 16) + x.shape[2:]), batch)
+            if excl:
+                batch = _exclude(batch, j)
+            params, _ = round_fn(params, batch)
+    accs["splitfed"] = float(ev_split(params, tb)["acc_mtl"])
+
+    # ---- MTSL: phase 1 normal (client j excluded), phase 2 trains ONLY
+    #      the new tower (server + other towers frozen)
+    opt = sgd(lr)
+    p = strip(init_state(model, opt, jax.random.PRNGKey(0), M, "mtsl"))
+    state = TrainState(p, opt.init(p), jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(build_train_step(model, opt, M, "mtsl"))
+    clr1 = lr_policy.server_scaled(M, 2.0 / M)
+    clr2 = client_freeze_lr(M, j)
+    steps1 = rounds1 * ls  # match the FL gradient-step budget
+    steps2 = rounds2 * ls
+    for i, batch in enumerate(client_batches(src, 16, steps=steps1, seed=1)):
+        state, _ = step_fn(state, _exclude(batch, j), clr1)
+    for i, batch in enumerate(client_batches(src, 16, steps=steps2, seed=2)):
+        state, _ = step_fn(state, batch, clr2)
+    accs["mtsl"] = float(ev_split(state.params, tb)["acc_mtl"])
+
+    for alg, acc in accs.items():
+        rows.append((f"table3/new_client/{alg}", 0.0, f"acc={acc:.3f}"))
+    note = "PASS" if accs["mtsl"] >= max(accs["fedavg"], accs["splitfed"]) - 1e-6 else "FAIL"
+    rows.append(("table3/claim_mtsl_best", 0.0, note))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,23 @@
+"""Quickstart: MTSL vs FedAvg on heterogeneous multi-task data in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from benchmarks.common import run_algorithm
+
+if __name__ == "__main__":
+    print("devices:", jax.devices())
+    print("\nTraining the paper's 4-layer MLP on maximally heterogeneous "
+          "(alpha=0) synthetic multi-task data...\n")
+    results = {}
+    for alg in ["fedavg", "mtsl"]:
+        steps = 2000 if alg == "fedavg" else 400
+        r = run_algorithm("paper-mlp", alg, alpha=0.0, steps=steps, lr=0.1,
+                          local_steps=100)
+        results[alg] = r
+        print(f"  {alg:8s}: Accuracy_MTL = {r.acc_mtl:.3f}  ({r.wall_s:.1f}s)")
+    print("\nMTSL keeps per-client towers private (no federation) and lets "
+          "the shared server aggregate implicitly -> no client-drift collapse.")
+    m, f = results["mtsl"], results["fedavg"]
+    print(f"MTSL advantage: +{(m.acc_mtl - f.acc_mtl) * 100:.1f} accuracy points")

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a Mamba2-family LM with MTSL on heterogeneous
+per-client Markov-chain corpora, with checkpointing and per-task loss
+reporting against each client's entropy floor.
+
+Default is a CPU-friendly ~20M-param reduction; --full trains the real
+mamba2-130m config (129M params — expect ~10s/step on CPU).
+
+    PYTHONPATH=src python examples/train_mtsl_lm.py --steps 200
+    PYTHONPATH=src python examples/train_mtsl_lm.py --full --steps 300
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import lr_policy
+from repro.core.mtsl import TrainState, build_train_step, init_state
+from repro.data.lm import MultiTaskLMSource
+from repro.data.pipeline import client_batches
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.checkpoint import save_checkpoint
+from repro.utils.sharding import strip
+from repro.utils.tree import tree_size
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true", help="real mamba2-130m")
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch-per-client", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint", default="/tmp/mtsl_lm.msgpack")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config("mamba2-130m").with_updates(
+            num_clients=4, scan_layers=True, remat="none", dtype="float32")
+    else:
+        cfg = get_config("mamba2-130m").with_updates(
+            num_layers=6, d_model=512, vocab_size=2048, ssm_chunk=64,
+            num_clients=4, split_layers=2, scan_layers=False, remat="none",
+            dtype="float32")
+    model = build_model(cfg)
+    M = cfg.num_clients
+
+    opt = adamw(args.lr)
+    params = strip(init_state(model, opt, jax.random.PRNGKey(0), M, "mtsl"))
+    n_params = tree_size(params["towers"]) // M + tree_size(params["server"])
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params/client-view, "
+          f"{M} clients)")
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(build_train_step(model, opt, M, "mtsl"))
+    clr = lr_policy.server_scaled(M, server_scale=2.0 / M)
+
+    src = MultiTaskLMSource(vocab_size=cfg.vocab_size, num_clients=M,
+                            beta=1.0, seed=0)
+    floors = [src.entropy_floor(m) for m in range(M)]
+    print("per-client entropy floors (nats):",
+          " ".join(f"{f:.3f}" for f in floors))
+
+    for i, batch in enumerate(client_batches(
+            src, args.batch_per_client, seq_len=args.seq_len,
+            steps=args.steps, seed=0)):
+        state, metrics = step_fn(state, batch, clr)
+        if (i + 1) % 20 == 0 or i == 0:
+            per = np.asarray(metrics["per_task"])
+            gap = " ".join(f"{p - f:+.3f}" for p, f in zip(per, floors))
+            print(f"step {i+1:>5d}  loss {float(metrics['loss']):.4f}  "
+                  f"per-task gap-to-floor [{gap}]")
+    save_checkpoint(args.checkpoint, {"params": state.params,
+                                      "step": int(state.step)})
+    print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

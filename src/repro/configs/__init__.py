@@ -1,0 +1,24 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    INPUT_SHAPES,
+    get_config,
+    list_configs,
+    register,
+)
+
+# importing the modules registers their configs
+from repro.configs import (  # noqa: F401
+    gemma3_12b,
+    llama_3_2_vision_11b,
+    deepseek_7b,
+    mamba2_130m,
+    deepseek_moe_16b,
+    qwen3_moe_30b_a3b,
+    whisper_tiny,
+    mistral_large_123b,
+    zamba2_7b,
+    mistral_nemo_12b,
+    paper_mlp,
+    paper_resnet,
+)

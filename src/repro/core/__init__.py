@@ -1,0 +1,9 @@
+"""MTSL — the paper's contribution as a first-class framework feature."""
+from repro.core.mtsl import (
+    TrainState,
+    make_loss_fn,
+    build_train_step,
+    build_eval_step,
+    init_state,
+)
+from repro.core import comm_cost, federation, lr_policy, split, theory

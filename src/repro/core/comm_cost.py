@@ -1,0 +1,80 @@
+"""Analytic edge-network communication accounting (paper Fig. 3b).
+
+The paper counts bytes crossing the client<->server links per round:
+
+  MTSL     up:  M·(b·|s| + b·|y|)          (smashed data + labels)
+           down: M·(b·|s|)                  (activation gradients)
+  SplitFed MTSL traffic + tower federation: M·(|psi| up + |psi| down)
+  FedAvg   M·(|theta| up + |theta| down)    (full-model grads/params)
+  FedEM    K·M·(|theta| up + |theta| down)  (K components)
+
+|s| = d_model elements per token/sample at the split boundary. On the TPU
+mesh the same quantities appear as HLO collectives (measured by the roofline
+harness); this module is the paper-faithful *edge* model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.utils import tree as tu
+
+
+@dataclass(frozen=True)
+class RoundCost:
+    up_bytes: int
+    down_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.up_bytes + self.down_bytes
+
+
+def _smashed_elems(cfg: ModelConfig, batch_per_client: int, seq_len: int = 1) -> int:
+    if cfg.family == "mlp":
+        return batch_per_client * cfg.mlp_dims[cfg.split_layers]
+    if cfg.family == "resnet":
+        # spatial map after `split_layers` stages (stride 2 between stages)
+        hw = cfg.image_size // (2 ** max(cfg.split_layers - 1, 0))
+        c = cfg.resnet_stages[cfg.split_layers - 1][0]
+        return batch_per_client * hw * hw * c
+    if cfg.family == "encdec":
+        return batch_per_client * cfg.encoder_seq * cfg.d_model
+    return batch_per_client * seq_len * cfg.d_model
+
+
+def params_count(tree) -> int:
+    return tu.tree_size(tree)
+
+
+def round_cost(
+    algorithm: str,
+    cfg: ModelConfig,
+    num_clients: int,
+    batch_per_client: int,
+    seq_len: int = 1,
+    tower_params: int | None = None,
+    total_params: int | None = None,
+    bytes_per_elem: int = 4,
+    label_bytes: int = 4,
+    num_components: int = 3,
+) -> RoundCost:
+    """Bytes per training round for one of {mtsl, splitfed, fedavg, fedem}."""
+    M = num_clients
+    s = _smashed_elems(cfg, batch_per_client, seq_len) * bytes_per_elem
+    labels = batch_per_client * max(seq_len, 1) * label_bytes
+    if algorithm == "mtsl":
+        return RoundCost(up_bytes=M * (s + labels), down_bytes=M * s)
+    if algorithm == "splitfed":
+        assert tower_params is not None
+        fed = M * tower_params * bytes_per_elem
+        return RoundCost(up_bytes=M * (s + labels) + fed, down_bytes=M * s + fed)
+    if algorithm == "fedavg":
+        assert total_params is not None
+        fed = M * total_params * bytes_per_elem
+        return RoundCost(up_bytes=fed, down_bytes=fed)
+    if algorithm == "fedem":
+        assert total_params is not None
+        fed = num_components * M * total_params * bytes_per_elem
+        return RoundCost(up_bytes=fed, down_bytes=fed)
+    raise ValueError(algorithm)

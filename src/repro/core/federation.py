@@ -1,0 +1,361 @@
+"""Sync policies (the FL baselines) + FedEM.
+
+The paper's comparison is an ablation of *where the federation all-reduce
+goes* (DESIGN.md §2):
+
+    mtsl:     towers private (no collective), server grads summed.
+    splitfed: tower grads averaged over clients (the split-part federation),
+              server as mtsl.
+    fedavg:   everything averaged over clients (classic federation).
+
+`sync_transform` returns the gradient transformation; in the sharded program
+the tower-mean lowers to an all-reduce over the client ("data") axis — the
+federation traffic becomes *visible in the HLO* and is measured by the
+roofline harness.
+
+FedEM [Marfoq et al., 2021] learns a mixture of K full models with
+per-client mixture weights; it has its own state/step builders.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer, apply_updates
+from repro.utils.sharding import Annotated, axes_of, strip
+
+PyTree = Any
+
+ALGORITHMS = ("mtsl", "splitfed", "fedavg")
+
+
+def sync_transform(algorithm: str, num_clients: int) -> Callable[[PyTree], PyTree]:
+    if algorithm == "mtsl":
+        return lambda grads: grads
+
+    def _avg_towers(grads):
+        towers = jax.tree.map(
+            lambda g: jnp.broadcast_to(
+                jnp.mean(g, axis=0, keepdims=True), g.shape
+            ),
+            grads["towers"],
+        )
+        return {**grads, "towers": towers}
+
+    if algorithm == "splitfed":
+        return _avg_towers
+
+    if algorithm == "fedavg":
+        inv = 1.0 / num_clients
+
+        def _fedavg(grads):
+            grads = _avg_towers(grads)
+            server = jax.tree.map(lambda g: g * inv, grads["server"])
+            return {**grads, "server": server}
+
+        return _fedavg
+
+    raise ValueError(f"unknown algorithm {algorithm!r}; have {ALGORITHMS} + fedem")
+
+
+# ---------------------------------------------------------------------------
+# Round-based FL (faithful to McMahan et al.): LOCAL STEPS between averaging
+# rounds. This is where client drift — the paper's Table-2 pathology under
+# heterogeneity — actually comes from; the single-step sync_transform path
+# above is the large-batch/sharded-HLO equivalent used on the mesh.
+# ---------------------------------------------------------------------------
+
+
+def _full_model_loss(model: Model):
+    cfg = model.cfg
+    is_classifier = cfg.family in ("mlp", "resnet")
+
+    def loss_fn(params_c, mb):
+        """One client's full model on one local batch (no client axis)."""
+        inputs = {k: v for k, v in mb.items() if k != "label"}
+        smashed = model.tower_forward(params_c["tower"], inputs)
+        logits, aux = model.server_forward(params_c["server"], smashed)
+        logits = logits.astype(jnp.float32)
+        if is_classifier:
+            labels = mb["label"]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold) + aux
+        tokens = mb["tokens"]
+        logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+        gold = jnp.take_along_axis(logits[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold) + aux
+
+    return loss_fn
+
+
+def build_fedavg_round(model: Model, lr: float, num_clients: int,
+                       local_steps: int) -> Callable:
+    """One FedAvg ROUND: every client runs `local_steps` SGD steps on its own
+    data from the shared model, then all full-model params are averaged.
+
+    params: {"towers": [M, ...], "servers": [M, ...]} (kept identical across
+    clients between rounds). batch: [M, local_steps, b, ...].
+    """
+    loss_fn = _full_model_loss(model)
+
+    def round_fn(params, batch):
+        def client_run(tp, sp, client_batch):
+            def one_step(carry, mb):
+                pc = carry
+                loss, grads = jax.value_and_grad(lambda p: loss_fn(p, mb))(pc)
+                pc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), pc, grads)
+                return pc, loss
+            pc, losses = jax.lax.scan(
+                one_step, {"tower": tp, "server": sp}, client_batch)
+            return pc, jnp.mean(losses)
+
+        pcs, losses = jax.vmap(client_run)(
+            params["towers"], params["servers"], batch)
+        # federation: average everything, broadcast back
+        avg = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape), pcs)
+        new = {"towers": avg["tower"], "servers": avg["server"]}
+        return new, {"loss": jnp.sum(losses), "per_task": losses}
+
+    return round_fn
+
+
+def build_splitfed_round(model: Model, lr: float, num_clients: int,
+                         local_steps: int) -> Callable:
+    """One SplitFed ROUND [Thapa et al.]: for `local_steps` steps the clients
+    run split learning against the CENTRAL server model (server updates every
+    step, like MTSL); at the end of the round the client-side parts are
+    fed-averaged. params: {"towers": [M,...], "server": ...}."""
+    cfg = model.cfg
+    M = num_clients
+    from repro.core.mtsl import make_loss_fn
+
+    loss_fn = make_loss_fn(model, M)
+
+    def round_fn(params, batch):
+        def one_step(carry, mb):
+            p = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, mb)
+            p = jax.tree.map(lambda q, g: q - lr * g.astype(q.dtype), p, grads)
+            return p, metrics["per_task"]
+
+        mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
+        p, per = jax.lax.scan(one_step, params, mbs)
+        towers = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape),
+            p["towers"])
+        new = {"towers": towers, "server": p["server"]}
+        return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
+
+    return round_fn
+
+
+def init_fedavg_params(model: Model, rng, num_clients: int):
+    """Replicated full model per client (Annotated)."""
+    from repro.core.split import replicate_tower
+
+    towers = replicate_tower(model.init_tower, rng, num_clients)
+    servers = replicate_tower(model.init_server, jax.random.fold_in(rng, 1),
+                              num_clients)
+    return {"towers": towers, "servers": servers}
+
+
+def eval_fedavg(model: Model, num_clients: int):
+    """Eval the (shared) FedAvg model per task: use client m's copy."""
+    cfg = model.cfg
+    M = num_clients
+
+    def eval_fn(params, batch):
+        def client_eval(tp, sp, inputs, labels):
+            smashed = model.tower_forward(tp, inputs)
+            logits, _ = model.server_forward(sp, smashed)
+            preds = jnp.argmax(logits.astype(jnp.float32), -1)
+            return jnp.mean((preds == labels).astype(jnp.float32))
+
+        inputs = {k: v for k, v in batch.items() if k != "label"}
+        accs = jax.vmap(client_eval)(params["towers"], params["servers"],
+                                     inputs, batch["label"])
+        return {"per_task_acc": accs, "acc_mtl": jnp.mean(accs)}
+
+    return eval_fn
+
+
+def build_fedem_round(model: Model, lr: float, num_clients: int,
+                      num_components: int, local_steps: int) -> Callable:
+    """One FedEM ROUND [Marfoq et al. 2021]: each client (i) computes
+    responsibilities over the K shared components, (ii) runs `local_steps`
+    responsibility-weighted SGD steps on ALL K components locally, then the
+    components are averaged across clients and pi is updated.
+
+    state: (components [K,...] of {"tower","server"}, pi [M,K]).
+    batch: [M, local_steps, b, ...].
+    """
+    loss_fn = _full_model_loss(model)
+    K = num_components
+
+    def per_sample_losses(comps, mb):
+        # comps: [K, ...]; mb: one client's local batch (no client axis)
+        return jax.vmap(lambda c: loss_fn(c, mb))(comps)  # [K] (batch-mean)
+
+    def round_fn(components, pi, batch):
+        def client_run(pi_m, client_batch):
+            def one_step(comps, mb):
+                l = per_sample_losses(comps, mb)  # [K]
+                r = jax.nn.softmax(jnp.log(pi_m + 1e-12) - l)  # [K]
+                r = jax.lax.stop_gradient(r)
+
+                def wloss(cs):
+                    return jnp.sum(r * jax.vmap(lambda c: loss_fn(c, mb))(cs))
+
+                grads = jax.grad(wloss)(comps)
+                comps = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                     comps, grads)
+                return comps, r
+
+            comps, rs = jax.lax.scan(one_step, components, client_batch)
+            return comps, jnp.mean(rs, axis=0)  # new local comps, mean resp
+
+        comps_per_client, r_mean = jax.vmap(client_run)(pi, batch)
+        new_components = jax.tree.map(lambda x: jnp.mean(x, 0), comps_per_client)
+        new_pi = r_mean / jnp.sum(r_mean, axis=-1, keepdims=True)
+        loss = jnp.zeros(())  # recomputed by eval; keep the round cheap
+        return new_components, new_pi, {"loss": loss}
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# FedEM: mixture of K full models with per-client responsibilities
+# ---------------------------------------------------------------------------
+
+
+class FedEMState(NamedTuple):
+    components: PyTree  # stacked [K, ...] full-model params {"tower","server"}
+    pi: jax.Array  # [M, K] mixture weights per client
+    opt_state: PyTree
+    step: jax.Array
+
+
+def init_fedem_state(model: Model, rng, num_clients: int, num_components: int = 3):
+    """Annotated component params; pi uniform."""
+
+    def one_component(r):
+        k1, k2 = jax.random.split(r)
+        return {"tower": model.init_tower(k1), "server": model.init_server(k2)}
+
+    from repro.nn import abstract_mode
+
+    if abstract_mode():
+        t = one_component(rng)
+
+        def _stk(a: Annotated):
+            sds = jax.ShapeDtypeStruct((num_components,) + tuple(a.value.shape), a.value.dtype)
+            return Annotated(sds, (None,) + a.axes)
+
+        comps = jax.tree.map(_stk, t, is_leaf=lambda x: isinstance(x, Annotated))
+    else:
+        template = one_component(rng)
+        rngs = jax.random.split(jax.random.fold_in(rng, 0xE1), num_components)
+        vals = jax.vmap(lambda r: strip(one_component(r)))(rngs)
+        ax = axes_of(template)
+        flat_v, treedef = jax.tree.flatten(vals)
+        flat_a = treedef.flatten_up_to(ax)
+        comps = jax.tree.unflatten(
+            treedef,
+            [Annotated(v, (None,) + tuple(a)) for v, a in zip(flat_v, flat_a)],
+        )
+    pi = jnp.full((num_clients, num_components), 1.0 / num_components, jnp.float32)
+    return comps, pi
+
+
+def build_fedem_train_step(
+    model: Model,
+    base_optimizer: Optimizer,
+    num_clients: int,
+    num_components: int = 3,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    E-step: responsibilities r[m,b,k] ∝ pi[m,k]·exp(-loss of component k on
+    sample (m,b)). M-step: each component takes a responsibility-weighted
+    gradient step; pi <- mean_b r.
+    """
+    cfg = model.cfg
+    M = num_clients
+    is_classifier = cfg.family in ("mlp", "resnet")
+
+    def _per_sample_loss(comp_params, batch):
+        inputs = {k: v for k, v in batch.items() if k != "label"}
+        flat_in = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), inputs)
+        smashed = model.tower_forward(comp_params["tower"], flat_in)
+        logits, _ = model.server_forward(comp_params["server"], smashed)
+        logits = logits.astype(jnp.float32)
+        if is_classifier:
+            labels = batch["label"].reshape(-1)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+            return (logz - gold).reshape(M, -1)  # [M, b]
+        tokens = batch["tokens"].reshape((-1,) + batch["tokens"].shape[2:])
+        logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+        gold = jnp.take_along_axis(
+            logits[:, :-1], tokens[:, 1:, None], axis=-1
+        )[..., 0]
+        return jnp.mean(logz - gold, axis=-1).reshape(M, -1)
+
+    def train_step(state: FedEMState, batch):
+        # E-step (no grad)
+        losses = jax.vmap(_per_sample_loss, in_axes=(0, None))(
+            state.components, batch
+        )  # [K, M, b]
+        log_r = jnp.log(state.pi.T[:, :, None] + 1e-12) - losses  # [K,M,b]
+        r = jax.nn.softmax(log_r, axis=0)
+        r = jax.lax.stop_gradient(r)
+
+        # M-step: responsibility-weighted loss over all components
+        def total_loss(components):
+            l = jax.vmap(_per_sample_loss, in_axes=(0, None))(components, batch)
+            return jnp.sum(r * l) / (M * l.shape[-1]), l
+
+        (loss, l), grads = jax.value_and_grad(total_loss, has_aux=True)(
+            state.components
+        )
+        updates, opt_state = base_optimizer.update(
+            grads, state.opt_state, state.components, state.step
+        )
+        components = apply_updates(state.components, updates)
+        pi = jnp.mean(r, axis=-1).T  # [M, K]
+        new_state = FedEMState(components, pi, opt_state, state.step + 1)
+        return new_state, {"loss": loss, "pi": pi}
+
+    return train_step
+
+
+def build_fedem_eval_step(model: Model, num_clients: int) -> Callable:
+    """Mixture prediction: per-client pi-weighted average of component
+    probabilities (classification)."""
+    cfg = model.cfg
+    M = num_clients
+    assert cfg.family in ("mlp", "resnet"), "FedEM eval implemented for classifiers"
+
+    def eval_step(state: FedEMState, batch):
+        inputs = {k: v for k, v in batch.items() if k != "label"}
+        flat_in = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), inputs)
+
+        def comp_probs(comp_params):
+            smashed = model.tower_forward(comp_params["tower"], flat_in)
+            logits, _ = model.server_forward(comp_params["server"], smashed)
+            return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+        probs = jax.vmap(comp_probs)(state.components)  # [K, M*b, C]
+        probs = probs.reshape(probs.shape[0], M, -1, probs.shape[-1])
+        mixed = jnp.einsum("kmbc,mk->mbc", probs, state.pi)
+        preds = jnp.argmax(mixed, -1)
+        correct = (preds == batch["label"]).astype(jnp.float32)
+        per_task_acc = jnp.mean(correct, axis=1)
+        return {"per_task_acc": per_task_acc, "acc_mtl": jnp.mean(per_task_acc)}
+
+    return eval_step

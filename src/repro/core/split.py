@@ -1,0 +1,75 @@
+"""Split-parameter machinery: stacking client towers, client-axis sharding,
+freeze masks for the paper's add-a-new-client experiment.
+
+Every model in the zoo is built pre-split (registry.py); this module turns
+ONE tower init into the MTSL parameter layout:
+
+    params = {"towers": <leading client axis [M, ...]>, "server": ...}
+
+The towers' leading axis carries the logical "client" name so it shards over
+("pod", "data") — each data shard physically holds exactly one client's
+private parameters (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import abstract_mode
+from repro.utils.sharding import Annotated, axes_of, strip
+
+PyTree = Any
+
+
+def stack_towers(init_tower: Callable, rng, num_clients: int) -> PyTree:
+    """[M, ...]-stacked tower params (Annotated), one independent init per
+    client. Abstract mode: pure shape transformation (dry-run path)."""
+    if abstract_mode():
+        t = init_tower(rng)
+
+        def _stk(a: Annotated):
+            sds = jax.ShapeDtypeStruct((num_clients,) + tuple(a.value.shape), a.value.dtype)
+            return Annotated(sds, ("client",) + a.axes)
+
+        return jax.tree.map(_stk, t, is_leaf=lambda x: isinstance(x, Annotated))
+    template = init_tower(rng)
+    rngs = jax.random.split(jax.random.fold_in(rng, 0x5117), num_clients)
+    vals = jax.vmap(lambda r: strip(init_tower(r)))(rngs)
+    ax = axes_of(template)
+    flat_v, treedef = jax.tree.flatten(vals)
+    flat_a = treedef.flatten_up_to(ax)
+    out = [Annotated(v, ("client",) + tuple(a)) for v, a in zip(flat_v, flat_a)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def replicate_tower(init_tower: Callable, rng, num_clients: int) -> PyTree:
+    """Identical tower per client (FedAvg/SplitFed init: shared start)."""
+    if abstract_mode():
+        return stack_towers(init_tower, rng, num_clients)
+    template = init_tower(rng)
+    vals = strip(template)
+    ax = axes_of(template)
+    flat_v, treedef = jax.tree.flatten(vals)
+    flat_a = treedef.flatten_up_to(ax)
+    out = [
+        Annotated(jnp.broadcast_to(v[None], (num_clients,) + v.shape).copy(),
+                  ("client",) + tuple(a))
+        for v, a in zip(flat_v, flat_a)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def is_client_path(path: str) -> bool:
+    return path.startswith("towers")
+
+
+def client_freeze_lr(num_clients: int, active_client: int):
+    """ComponentLR that freezes everything except one client's tower — the
+    paper's add-a-new-client protocol (§4.2 Table 3: 'only the new client
+    model is trained while the models for the other clients are frozen')."""
+    from repro.optim.per_component import ComponentLR
+
+    clients = jnp.zeros((num_clients,), jnp.float32).at[active_client].set(1.0)
+    return ComponentLR(server=jnp.zeros((), jnp.float32), clients=clients)

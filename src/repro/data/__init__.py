@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    MultiTaskImageSource,
+    heterogeneous_label_dist,
+)
+from repro.data.lm import MultiTaskLMSource
+from repro.data.pipeline import client_batches

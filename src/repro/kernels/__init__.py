@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret mode
+on CPU; TPU v5e is the deployment target):
+
+  flash_attention/  blockwise fused attention (causal, sliding-window, GQA)
+  ssd_scan/         Mamba2 SSD chunked scan with VMEM-carried state
+  mtsl_update/      fused per-component-LR update (the paper's eta * g step)
+
+Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and
+ref.py (pure-jnp oracle used by tests and by the CPU/dry-run math path).
+"""

@@ -1,0 +1,140 @@
+"""Pure-jnp attention oracle (grouped-query, causal / sliding-window / cross).
+
+This is both the correctness reference for the Pallas flash kernel and the
+default math path of the model zoo on CPU and in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attn_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_valid=None,
+) -> jax.Array:
+    """Boolean [q_len, kv_len] (or [B, q_len, kv_len]) mask; True = attend.
+
+    q_offset: absolute position of q[0] relative to kv[0] (decode: cache len).
+    window: sliding-window size (0 = unlimited). position i attends j iff
+        j <= i (causal) and i - j < window.
+    kv_valid: optional [B] number of valid kv slots (decode with a partially
+        filled cache).
+    """
+    qpos = jnp.arange(q_len)[:, None] + q_offset  # [q,1]
+    kpos = jnp.arange(kv_len)[None, :]  # [1,k]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    if kv_valid is not None:
+        kv_valid = jnp.asarray(kv_valid)
+        mask = mask[None] & (kpos[None] < kv_valid.reshape(-1, 1, 1))
+    return mask
+
+
+def mha_reference(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,  # [B, Sk, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_valid=None,
+) -> jax.Array:
+    """Grouped-query attention, softmax in f32. Returns [B, Sq, Hq, D]."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores.astype(jnp.float32) * scale
+    mask = attn_mask(Sq, Sk, causal=causal, window=window, q_offset=q_offset, kv_valid=kv_valid)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]  # [1,1,1,q,k]
+    else:  # [B,q,k]
+        mask = mask[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def mha_chunked(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks — the flash-attention
+    recurrence in pure JAX, so XLA never materializes the [Sq, Sk] score
+    matrix (temp memory O(Sq x chunk) instead of O(Sq x Sk)). The scan body
+    is rematerialized in the backward pass (checkpoint), keeping training
+    memory chunked too. Numerically identical to mha_reference (tested).
+
+    This is the beyond-paper memory optimization used by the §Perf hillclimb
+    (cfg.attn_impl = "chunked"); on TPU the Pallas kernel plays this role.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qpos = jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, k_c, v_c = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_c,
+                       preferred_element_type=jnp.float32).astype(jnp.float32) * scale
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = jnp.logical_and(mask, kpos[None, :] <= qpos[:, None])
+        if window:
+            mask = jnp.logical_and(mask, qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v_c.dtype), v_c).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).astype(q.dtype)  # [B, Hkv, G, Sq, D]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)

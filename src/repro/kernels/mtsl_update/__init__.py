@@ -1,0 +1,2 @@
+from repro.kernels.mtsl_update.ops import mtsl_update
+from repro.kernels.mtsl_update.ref import mtsl_update_reference

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused per-component-LR SGD update (p <- p - eta*g).
+
+The paper's signature update is a learning-rate *vector* over components
+(server, client 1..M). Fusing scale-and-subtract into one elementwise kernel
+is bandwidth-optimal on TPU: 2 HBM reads + 1 write per element instead of
+3 reads + 2 writes for a scale-then-subtract pair. eta arrives via scalar
+prefetch (SMEM) so one compiled kernel serves every component.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _update_kernel(eta_ref, p_ref, g_ref, o_ref):
+    eta = eta_ref[0]
+    o_ref[...] = (
+        p_ref[...].astype(jnp.float32) - eta * g_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def mtsl_update_fwd(p: jax.Array, g: jax.Array, eta: jax.Array, *,
+                    block: int = 1024, lanes: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Flat fused update. p, g: same shape; eta: scalar. Returns p - eta*g."""
+    shape = p.shape
+    n = p.size
+    rows = -(-n // lanes)
+    pad = rows * lanes - n
+    pf = jnp.pad(p.reshape(-1), (0, pad)).reshape(rows, lanes)
+    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows, lanes)
+    block_rows = min(block, rows)
+    grid = (-(-rows // block_rows),)
+    pad_rows = grid[0] * block_rows - rows
+    if pad_rows:
+        pf = jnp.pad(pf, ((0, pad_rows), (0, 0)))
+        gf = jnp.pad(gf, ((0, pad_rows), (0, 0)))
+
+    out = pl.pallas_call(
+        _update_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, lanes), lambda i, eta: (i, 0)),
+                pl.BlockSpec((block_rows, lanes), lambda i, eta: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, lanes), lambda i, eta: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pf.shape, p.dtype),
+        interpret=interpret,
+    )(jnp.asarray(eta, jnp.float32).reshape(1), pf, gf)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,10 @@
+"""Oracle for the fused per-component-LR update (paper Alg. 1 lines 11/15):
+    p_new = p - eta * g
+with eta a scalar per component (server) or per client tower."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mtsl_update_reference(p, g, eta):
+    return (p.astype(jnp.float32) - jnp.asarray(eta, jnp.float32) * g.astype(jnp.float32)).astype(p.dtype)

@@ -1,0 +1,122 @@
+"""Pure-jnp Mamba2 SSD (state-space duality) oracle — chunked algorithm.
+
+Computes, per head h with scalar decay A_h (negative), inputs x_t, and
+data-dependent B_t, C_t (shared across heads, n_groups=1):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T        (state [P, N])
+    y_t = C_t^T h_t + D * x_t
+
+via the chunked SSD decomposition [arXiv:2405.21060 §6]: intra-chunk
+(quadratic attention-like) term + inter-chunk recurrence on chunk states.
+This is both the Pallas kernel oracle and the CPU/dry-run math path.
+
+Shapes (n_groups = 1):
+    x:  [B, L, H, P]    (P = headdim)
+    dt: [B, L, H]       (softplus-activated, >0)
+    A:  [H]             (negative reals; decay = exp(dt*A))
+    Bm: [B, L, N]       (N = ssm_state)
+    Cm: [B, L, N]
+returns y: [B, L, H, P] and final state [B, H, P, N].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable 'segment sum': S[..., i, j] = sum_{k=j+1..i} a[..., k], lower-tri.
+
+    Returns [..., T, T] with -inf above the diagonal (so exp() = 0).
+    """
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    S = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, S, -jnp.inf)
+
+
+def ssd_reference(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,
+):
+    """Chunked SSD. Returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    C = L // chunk
+
+    f32 = jnp.float32
+    x_ = x.astype(f32).reshape(Bsz, C, chunk, H, P)
+    dt_ = dt.astype(f32).reshape(Bsz, C, chunk, H)
+    B_ = Bm.astype(f32).reshape(Bsz, C, chunk, N)
+    C_ = Cm.astype(f32).reshape(Bsz, C, chunk, N)
+    dA = dt_ * A.astype(f32)[None, None, None, :]  # [B,C,T,H]
+    dA = jnp.moveaxis(dA, -1, 2)  # [B,C,H,T]
+
+    # ---- intra-chunk (diagonal) term: attention-like, lower-triangular
+    Lmat = jnp.exp(_segsum(dA))  # [B,C,H,T,T]
+    # scores[b,c,h,t,s] = C_t . B_s * L[t,s] * dt_s
+    CB = jnp.einsum("bctn,bcsn->bcts", C_, B_)  # [B,C,T,T]
+    W = CB[:, :, None] * Lmat * jnp.moveaxis(dt_, -1, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchts,bcshp->bcthp", W, x_)
+
+    # ---- chunk states: state_c = sum_s decay(T-1..s) * dt_s * B_s x_s^T
+    decay_states = jnp.exp(jnp.cumsum(dA, axis=-1)[..., -1:] - jnp.cumsum(dA, axis=-1))
+    # [B,C,H,T]
+    states = jnp.einsum(
+        "bcht,bctn,bcthp->bchpn",
+        decay_states,
+        B_,
+        x_ * dt_[..., None],  # dt folded into x
+    )
+
+    # ---- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=-1))  # [B,C,H] total decay per chunk
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev  # emit state *entering* the chunk
+
+    h0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), f32)
+    )
+    states_t = jnp.moveaxis(states, 1, 0)  # [C,B,H,P,N]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # [C,B,H]
+    final_state, entering = jax.lax.scan(scan_fn, h0, (states_t, decay_t))
+    entering = jnp.moveaxis(entering, 0, 1)  # [B,C,H,P,N]
+
+    # ---- inter-chunk output: y_off[t] = C_t . (decay(0..t) * h_entering)
+    state_decay = jnp.exp(jnp.cumsum(dA, axis=-1))  # [B,C,H,T] decay from chunk start thru t
+    y_off = jnp.einsum("bctn,bchpn,bcht->bcthp", C_, entering, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # [B, H, P, N]
+    x_t: jax.Array,  # [B, H, P]
+    dt_t: jax.Array,  # [B, H]
+    A: jax.Array,  # [H]
+    B_t: jax.Array,  # [B, N]
+    C_t: jax.Array,  # [B, N]
+):
+    """Single-token recurrent update. Returns (y_t [B,H,P], new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt_t.astype(f32) * A.astype(f32)[None, :])  # [B,H]
+    upd = jnp.einsum("bn,bhp->bhpn", B_t.astype(f32), x_t.astype(f32) * dt_t.astype(f32)[..., None])
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    return y.astype(x_t.dtype), new_state

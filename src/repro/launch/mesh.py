@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+Axes:
+  "data"  — data parallelism == the MTSL client axis (16-way per pod)
+  "model" — tensor/expert parallelism (16-way per pod)
+  "pod"   — multi-pod outer data axis (2 pods = 512 chips)
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline §g)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None):
+    """Small host mesh for integration tests (8 fake CPU devices: 2x2x2)."""
+    n = len(jax.devices()) if devices is None else devices
+    if n >= 8:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    return jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+def num_clients_for(mesh) -> int:
+    """MTSL clients = pod * data extent."""
+    n = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return max(n, 1)

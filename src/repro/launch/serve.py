@@ -1,0 +1,68 @@
+"""Serving launcher: loads (or random-inits) a split model and serves
+batched requests with per-client routing through the MTSL towers.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+        --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.split import stack_towers
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine
+from repro.train.checkpoint import load_checkpoint
+from repro.utils.sharding import strip
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch-per-client", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    M, b = cfg.num_clients, args.batch_per_client
+    rng = jax.random.PRNGKey(0)
+    if args.checkpoint:
+        params = load_checkpoint(args.checkpoint)["params"]
+    else:
+        params = strip({
+            "towers": stack_towers(model.init_tower, rng, M),
+            "server": model.init_server(jax.random.fold_in(rng, 1)),
+        })
+
+    max_len = args.prompt_len + args.new_tokens
+    engine = ServeEngine(model, params, M, max_len)
+    inputs = {"tokens": jax.random.randint(rng, (M, b, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        inputs["vis"] = jax.random.normal(rng, (M, b, cfg.vis_seq, cfg.vis_dim))
+    if cfg.family == "encdec":
+        inputs["frames"] = jax.random.normal(rng, (M, b, cfg.encoder_seq, cfg.d_model))
+
+    t0 = time.time()
+    out = engine.generate(inputs, args.new_tokens, temperature=args.temperature,
+                          rng=jax.random.fold_in(rng, 2))
+    dt = time.time() - t0
+    total = M * b * args.new_tokens
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. compile)")
+    print("sample (client 0):", np.asarray(out[0, 0])[:16])
+    return out
+
+
+if __name__ == "__main__":
+    main()

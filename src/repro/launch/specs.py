@@ -1,0 +1,181 @@
+"""Dry-run specs: ShapeDtypeStruct stand-ins for all program inputs
+(weak-type-correct, shardable, no device allocation) + the logical-axes
+annotation of every input so tree_shardings can build NamedShardings.
+
+Programs lowered per input shape (DESIGN.md §6):
+    train_4k     -> train_step(state, batch, component_lr)
+    prefill_32k  -> prefill_step(params, inputs)
+    decode_32k / long_500k -> decode_step(params, caches, token, pos)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.core.mtsl import TrainState, build_train_step
+from repro.core.split import stack_towers
+from repro.models.registry import Model, build_model
+from repro.nn import abstract_params
+from repro.optim.optimizers import Optimizer
+from repro.serve.engine import ServeCaches, build_decode_step, build_prefill_step
+from repro.utils import tree as tu
+from repro.utils.sharding import axes_of, strip, tree_shardings
+
+PyTree = Any
+
+# archs that can serve a 524288-token context (DESIGN.md §6)
+LONG_CONTEXT_OK = {
+    "gemma3-12b",  # 5:1 sliding-window:global
+    "mamba2-130m",  # SSM, O(1) state
+    "zamba2-7b",  # hybrid
+    "mistral-nemo-12b-swa",  # beyond-paper SWA variant
+}
+
+
+def long_context_supported(cfg: ModelConfig) -> bool:
+    return cfg.name in LONG_CONTEXT_OK
+
+
+def clients_for(shape: ShapeConfig, mesh) -> tuple[int, int]:
+    """(num_clients M, per-client batch b) for a shape on a mesh."""
+    from repro.launch.mesh import num_clients_for
+
+    M = num_clients_for(mesh)
+    if shape.global_batch < M:
+        return shape.global_batch, 1  # e.g. long_500k: one client
+    assert shape.global_batch % M == 0, (shape.global_batch, M)
+    return M, shape.global_batch // M
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> tuple[dict, dict]:
+    """(SDS dict, logical-axes dict) for the model inputs of one shape."""
+    M, b = clients_for(shape, mesh)
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    sds, axes = {}, {}
+    sds["tokens"] = jax.ShapeDtypeStruct((M, b, S), jnp.int32)
+    axes["tokens"] = ("client", None, None)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        sds["vis"] = jax.ShapeDtypeStruct((M, b, cfg.vis_seq, cfg.vis_dim), jnp.float32)
+        axes["vis"] = ("client", None, None, None)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        sds["frames"] = jax.ShapeDtypeStruct((M, b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        axes["frames"] = ("client", None, None, None)
+    return sds, axes
+
+
+# ---------------------------------------------------------------------------
+# parameters / optimizer state (abstract)
+# ---------------------------------------------------------------------------
+
+
+def abstract_mtsl_params(model: Model, num_clients: int):
+    """(SDS params tree, axes tree) for the MTSL layout, no allocation."""
+    rng = jax.random.PRNGKey(0)
+    with abstract_params():
+        annotated = {
+            "towers": stack_towers(model.init_tower, rng, num_clients),
+            "server": model.init_server(rng),
+        }
+    return strip(annotated), axes_of(annotated)
+
+
+def abstract_opt_state(optimizer: Optimizer, params_sds, params_axes):
+    """Optimizer state SDS + axes (momenta share the param layout)."""
+    state_sds = jax.eval_shape(optimizer.init, params_sds)
+    # map every state leaf that matches a param leaf's shape to its axes
+    flat_p, _ = jax.tree.flatten(params_sds)
+    flat_a = jax.tree.structure(params_sds).flatten_up_to(params_axes)
+    shape_to_axes = {}
+    for p, a in zip(flat_p, flat_a):
+        shape_to_axes.setdefault((tuple(p.shape), str(p.dtype)), a)
+
+    def _leaf_axes(leaf):
+        return shape_to_axes.get((tuple(leaf.shape), str(leaf.dtype)),
+                                 shape_to_axes.get((tuple(leaf.shape), "float32")))
+
+    leaves, treedef = jax.tree.flatten(state_sds)
+    axes = [_leaf_axes(l) for l in leaves]
+    return state_sds, jax.tree.unflatten(treedef, axes)
+
+
+# ---------------------------------------------------------------------------
+# caches (decode programs)
+# ---------------------------------------------------------------------------
+
+_KV_TAIL = ("kv_seq", "kv_heads", None)  # (cap, Hkv, D)
+_BASE_RANK = {"k": 4, "v": 4, "conv_x": 3, "conv_B": 3, "conv_C": 3, "state": 4,
+              "enc_out": 3}
+_TAIL_AXES = {
+    "k": _KV_TAIL,
+    "v": _KV_TAIL,
+    "conv_x": (None, "ssm_inner"),
+    "conv_B": (None, None),
+    "conv_C": (None, None),
+    "state": ("ssm_heads", None, None),
+    "enc_out": (None, None),
+}
+
+
+def cache_axes(cache_sds, is_tower: bool):
+    """Logical axes for a cache pytree by leaf-name + rank heuristics.
+
+    Leaf layouts (stacks.py / layers.py / ssm.py):
+      [client?][layers?][batch] + tail  — client only in tower caches.
+    """
+
+    def _one(path: str, leaf):
+        name = path.split("/")[-1]
+        base = _BASE_RANK.get(name)
+        if base is None:
+            return (None,) * leaf.ndim
+        tail = _TAIL_AXES[name]
+        extra = leaf.ndim - base
+        lead = []
+        if is_tower:
+            lead.append("client")
+            extra -= 1
+        lead += ["layers"] * max(extra, 0)
+        return tuple(lead) + ("batch",) + tuple(tail)
+
+    return tu.tree_map_with_path(_one, cache_sds)
+
+
+def abstract_caches(model: Model, shape: ShapeConfig, mesh, max_len: Optional[int] = None):
+    """(ServeCaches SDS, ServeCaches axes) for a decode program."""
+    cfg = model.cfg
+    M, b = clients_for(shape, mesh)
+    cap = max_len or shape.seq_len
+
+    def mk_tower():
+        c = model.init_tower_cache(b, cap)
+        return c
+
+    tower_sds = jax.eval_shape(mk_tower)
+    # vmap-over-clients prepends the client dim
+    tower_sds = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((M,) + tuple(l.shape), l.dtype), tower_sds
+    )
+    server_sds = jax.eval_shape(lambda: model.init_server_cache(M * b, cap))
+    extras_sds = {}
+    extras_axes = {}
+    if cfg.family == "vlm":
+        extras_sds["vis_proj"] = jax.ShapeDtypeStruct(
+            (M * b, cfg.vis_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        extras_axes["vis_proj"] = ("batch", None, None)
+    sds = ServeCaches(tower=tower_sds, server=server_sds, extras=extras_sds)
+    axes = ServeCaches(
+        tower=cache_axes(tower_sds, is_tower=True),
+        server=cache_axes(server_sds, is_tower=False),
+        extras=extras_axes,
+    )
+    return sds, axes

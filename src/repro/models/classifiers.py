@@ -1,0 +1,194 @@
+"""Paper-scale classifiers: 4-layer MLP (MNIST-likes) and CIFAR ResNet-16.
+
+These run end-to-end on CPU and carry the faithful reproduction of the
+paper's Tables 2-3 / Figures 2-4. Split semantics match the paper:
+  MLP:    split_layers dense layers client-side, rest server-side (2/2).
+  ResNet: stem + split_layers stages client-side (9 conv layers for the
+          default (16,2)(32,2)(64,2) stages, split=2), rest + head server.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import param
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _dense(rng, din, dout, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w": param(k1, (din, dout), (None, None), dtype=dtype),
+        "b": param(k2, (dout,), (None,), init="zeros", dtype=dtype),
+    }
+
+
+def _dense_apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def mlp_model(cfg: ModelConfig):
+    from repro.models.registry import Model
+
+    dims = cfg.mlp_dims
+    split = cfg.split_layers
+    assert 0 < split < len(dims) - 1
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def init_tower(rng):
+        ks = jax.random.split(rng, split)
+        return {f"fc{i}": _dense(ks[i], dims[i], dims[i + 1], dt) for i in range(split)}
+
+    def init_server(rng):
+        n = len(dims) - 1 - split
+        ks = jax.random.split(rng, n)
+        return {
+            f"fc{i}": _dense(ks[i], dims[split + i], dims[split + i + 1], dt)
+            for i in range(n)
+        }
+
+    def tower_forward(tp, inputs):
+        x = inputs["image"].reshape(inputs["image"].shape[0], -1)
+        for i in range(split):
+            x = _dense_apply(tp[f"fc{i}"], x)
+            x = jax.nn.relu(x)
+        return {"h": x}
+
+    def server_forward(sp, smashed):
+        x = smashed["h"]
+        n = len(dims) - 1 - split
+        for i in range(n):
+            x = _dense_apply(sp[f"fc{i}"], x)
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        return x, jnp.zeros((), jnp.float32)
+
+    return Model(
+        cfg=cfg,
+        init_tower=init_tower,
+        init_server=init_server,
+        tower_forward=tower_forward,
+        server_forward=server_forward,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ResNet (CIFAR-style, post-act basic blocks, LayerNorm instead of BatchNorm
+# so the math is batch-independent — noted in DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def _conv(rng, cin, cout, k, dtype):
+    return {
+        "w": param(rng, (k, k, cin, cout), (None, None, None, None), dtype=dtype,
+                   fan_in=k * k * cin)
+    }
+
+
+def _conv_apply(p, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _ln(x, eps=1e-5):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps)
+
+
+def _basic_block_params(rng, cin, cout, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"conv1": _conv(k1, cin, cout, 3, dtype), "conv2": _conv(k2, cout, cout, 3, dtype)}
+    if cin != cout:
+        p["proj"] = _conv(k3, cin, cout, 1, dtype)
+    return p
+
+
+def _basic_block_apply(p, x, stride):
+    h = _conv_apply(p["conv1"], x, stride)
+    h = jax.nn.relu(_ln(h))
+    h = _conv_apply(p["conv2"], h, 1)
+    h = _ln(h)
+    sc = x
+    if "proj" in p:
+        sc = _conv_apply(p["proj"], x, stride)
+    return jax.nn.relu(h + sc)
+
+
+def resnet_model(cfg: ModelConfig):
+    from repro.models.registry import Model
+
+    stages = cfg.resnet_stages
+    split = cfg.split_layers
+    assert 0 < split <= len(stages)
+    dt = jnp.dtype(cfg.param_dtype)
+    c0 = stages[0][0]
+
+    def _stage_init(rng, cin, cout, nblocks):
+        ks = jax.random.split(rng, nblocks)
+        return {
+            f"b{i}": _basic_block_params(ks[i], cin if i == 0 else cout, cout, dt)
+            for i in range(nblocks)
+        }
+
+    def _stage_apply(p, x, nblocks, first_stride):
+        for i in range(nblocks):
+            x = _basic_block_apply(p[f"b{i}"], x, first_stride if i == 0 else 1)
+        return x
+
+    def init_tower(rng):
+        ks = jax.random.split(rng, split + 1)
+        p = {"stem": _conv(ks[0], cfg.image_channels, c0, 3, dt)}
+        cin = c0
+        for s in range(split):
+            cout, nb = stages[s]
+            p[f"stage{s}"] = _stage_init(ks[s + 1], cin, cout, nb)
+            cin = cout
+        return p
+
+    def init_server(rng):
+        n = len(stages) - split
+        ks = jax.random.split(rng, n + 1)
+        p = {}
+        cin = stages[split - 1][0]
+        for j, s in enumerate(range(split, len(stages))):
+            cout, nb = stages[s]
+            p[f"stage{s}"] = _stage_init(ks[j], cin, cout, nb)
+            cin = cout
+        p["head"] = _dense(ks[-1], cin, cfg.num_classes, dt)
+        return p
+
+    def tower_forward(tp, inputs):
+        x = inputs["image"]
+        if x.ndim == 3:
+            x = x[..., None]
+        x = jax.nn.relu(_ln(_conv_apply(tp["stem"], x, 1)))
+        for s in range(split):
+            cout, nb = stages[s]
+            x = _stage_apply(tp[f"stage{s}"], x, nb, first_stride=1 if s == 0 else 2)
+        return {"h": x}
+
+    def server_forward(sp, smashed):
+        x = smashed["h"]
+        for s in range(split, len(stages)):
+            cout, nb = stages[s]
+            x = _stage_apply(sp[f"stage{s}"], x, nb, first_stride=1 if s == 0 else 2)
+        x = jnp.mean(x, axis=(1, 2))  # global average pool
+        return _dense_apply(sp["head"], x), jnp.zeros((), jnp.float32)
+
+    return Model(
+        cfg=cfg,
+        init_tower=init_tower,
+        init_server=init_server,
+        tower_forward=tower_forward,
+        server_forward=server_forward,
+    )

@@ -1,0 +1,241 @@
+"""Shared building blocks: norms, RoPE, GQA attention (full/SWA/cross),
+SwiGLU MLP, embeddings. All params are `Annotated` with logical axes; all
+apply functions take stripped (raw) params and compute in cfg.dtype with
+f32 softmax/norm accumulations.
+
+Attention supports three execution modes:
+  - forward:  full sequence, causal (+ optional sliding window)
+  - prefill:  forward + returns a KV cache
+  - decode:   one token against a cache (full-length or ring-buffer)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ref import mha_chunked, mha_reference
+from repro.nn import param
+from repro.utils.sharding import Annotated
+
+# ---------------------------------------------------------------------------
+# norms / rope / embedding
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(rng, d):
+    return {"scale": param(rng, (d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    ang = ang[..., None, :]  # broadcast over heads: [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def embedding_params(rng, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"table": param(rng, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                        init="normal", dtype=dt)}
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["table"], tokens, axis=0)
+    return (x * jnp.sqrt(float(cfg.d_model))).astype(jnp.dtype(cfg.dtype))
+
+
+def head_params(rng, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"w": param(rng, (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dtype=dt)}
+
+
+def lm_head(p, x, cfg: ModelConfig, embed_table=None):
+    if cfg.tie_embeddings:
+        w = embed_table.T
+    else:
+        w = p["w"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention block (pre-norm residual: x + attn(norm(x)); MLP added by caller)
+# ---------------------------------------------------------------------------
+
+
+def attn_params(rng, cfg: ModelConfig, cross: bool = False):
+    d, Hq, Hkv, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    del cross  # cross-attn kv input is d_model (vis is projected upstream)
+    ks = jax.random.split(rng, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    kv_in = d
+    return {
+        "wq": param(ks[0], (d, Hq, D), ("embed", "heads", "head_dim"), dtype=dt, fan_in=d),
+        "wk": param(ks[1], (kv_in, Hkv, D), ("embed", "kv_heads", "head_dim"), dtype=dt, fan_in=kv_in),
+        "wv": param(ks[2], (kv_in, Hkv, D), ("embed", "kv_heads", "head_dim"), dtype=dt, fan_in=kv_in),
+        "wo": param(ks[3], (Hq, D, d), ("heads", "head_dim", "embed"), dtype=dt, fan_in=Hq * D),
+        "norm": rmsnorm_params(ks[4], d),
+    }
+
+
+def _project_qkv(p, x, kv_src, cfg, positions, kv_positions, use_rope):
+    cdt = jnp.dtype(cfg.dtype)
+    q = jnp.einsum("...sd,dhk->...shk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("...sd,dhk->...shk", kv_src, p["wk"].astype(cdt))
+    v = jnp.einsum("...sd,dhk->...shk", kv_src, p["wv"].astype(cdt))
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, x, cfg: ModelConfig, *, window: int = 0, kv_src=None,
+                 positions=None, use_flash: bool = False, causal: bool = True):
+    """Training/prefill path. x: [B,S,d]. kv_src!=None -> cross-attn (no mask,
+    no rope on kv). Returns attention output [B,S,d] (residual added by caller)."""
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    cross = kv_src is not None
+    src = kv_src if cross else h
+    S = x.shape[-2]
+    if positions is None:
+        positions = jnp.arange(S)
+    kv_pos = jnp.arange(src.shape[-2]) if not cross else None
+    q, k, v = _project_qkv(p, h, src, cfg, positions, kv_pos, use_rope=not cross)
+    causal = causal and not cross
+    if use_flash and causal:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(q, k, v, causal=True, window=window)
+    elif cfg.attn_impl == "chunked" and not cross:
+        out = mha_chunked(q, k, v, causal=causal, window=window,
+                          chunk=cfg.attn_chunk)
+    else:
+        out = mha_reference(q, k, v, causal=causal, window=window)
+    cdt = jnp.dtype(cfg.dtype)
+    return jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt))
+
+
+def attn_prefill(p, x, cfg: ModelConfig, *, window: int = 0, max_len: int = 0,
+                 positions=None):
+    """Like attn_forward but also materializes the KV cache (self-attn only).
+
+    max_len: cache capacity (>= S); window>0 with cfg.decode_long_window uses
+    a ring cache of size min(max_len, window)."""
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    S = x.shape[-2]
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, h, h, cfg, positions, positions, use_rope=True)
+    if cfg.attn_impl == "chunked":
+        out = mha_chunked(q, k, v, causal=True, window=window, chunk=cfg.attn_chunk)
+    else:
+        out = mha_reference(q, k, v, causal=True, window=window)
+    cdt = jnp.dtype(cfg.dtype)
+    y = jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt))
+    cap = max_len if max_len else S
+    ring = bool(window) and cap > window and window > 0 and cfg.decode_long_window
+    if ring:
+        # ring-buffer cache: position p lives at slot p % window. The last
+        # `window` keys (positions S-window..S-1) land rolled by S % window.
+        cap = window
+        if S >= window:
+            k_c = jnp.roll(k[..., -window:, :, :], S % window, axis=-3)
+            v_c = jnp.roll(v[..., -window:, :, :], S % window, axis=-3)
+        else:
+            pad = window - S
+            k_c = jnp.pad(k, [(0, 0)] * (k.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+            v_c = jnp.pad(v, [(0, 0)] * (v.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+    else:
+        pad = cap - S
+        k_c = jnp.pad(k, [(0, 0)] * (k.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+        v_c = jnp.pad(v, [(0, 0)] * (v.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+    return y, {"k": k_c, "v": v_c}
+
+
+def attn_decode(p, x_t, cache, pos, cfg: ModelConfig, *, window: int = 0,
+                kv_src=None):
+    """One-token decode. x_t: [B,1,d]; pos: scalar absolute position.
+    cache: {'k','v'} [B,cap,Hkv,D]. Ring semantics when cap < needed window
+    history is impossible here because cap is fixed at init; ring iff
+    cap == window (long-decode variant). Returns (y, new_cache)."""
+    h = rmsnorm(p["norm"], x_t, cfg.norm_eps)
+    cross = kv_src is not None
+    if cross:
+        q, k, v = _project_qkv(p, h, kv_src, cfg, None, None, use_rope=False)
+        out = mha_reference(q, k, v, causal=False)
+        cdt = jnp.dtype(cfg.dtype)
+        return jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt)), cache
+    pos_arr = jnp.asarray(pos)[None]
+    q, k, v = _project_qkv(p, h, h, cfg, pos_arr, pos_arr, use_rope=True)
+    cap = cache["k"].shape[-3]
+    ring = bool(window) and cap == window
+    slot = (pos % cap) if ring else pos
+    k_new = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=-3)
+    v_new = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=-3)
+    if ring:
+        kv_valid = jnp.minimum(pos + 1, cap)
+        out = mha_reference(q, k_new, v_new, causal=False,
+                            kv_valid=jnp.broadcast_to(kv_valid, (x_t.shape[0],)))
+    else:
+        kv_valid = pos + 1
+        out = mha_reference(
+            q, k_new, v_new, causal=True, window=window, q_offset=pos,
+            kv_valid=jnp.broadcast_to(kv_valid, (x_t.shape[0],)),
+        )
+    cdt = jnp.dtype(cfg.dtype)
+    y = jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt))
+    return y, {"k": k_new, "v": v_new}
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, cap: int, window: int = 0):
+    if window and cfg.decode_long_window and cap > window:
+        cap = window
+    shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+    z = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(rng, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wg": param(ks[0], (d, f), ("embed", "ffn"), dtype=dt),
+        "wu": param(ks[1], (d, f), ("embed", "ffn"), dtype=dt),
+        "wd": param(ks[2], (f, d), ("ffn", "embed"), dtype=dt),
+        "norm": rmsnorm_params(ks[3], d),
+    }
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    cdt = jnp.dtype(cfg.dtype)
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    g = jnp.einsum("...sd,df->...sf", h, p["wg"].astype(cdt))
+    u = jnp.einsum("...sd,df->...sf", h, p["wu"].astype(cdt))
+    return jnp.einsum("...sf,fd->...sd", jax.nn.silu(g) * u, p["wd"].astype(cdt))

@@ -1,0 +1,285 @@
+"""Model assembly: every architecture is built *already split* into
+(client tower H, server stack G) per the MTSL framework — the full model
+used by the FL baselines is their composition.
+
+    tower_forward(tp, inputs)  -> smashed   {"h": [B,S,d], **extras}
+    server_forward(sp, smashed) -> (logits, aux)
+
+Serving adds prefill/decode with per-side caches. `inputs` is a dict:
+    LM decoder:   {"tokens": [B,S]}
+    VLM:          {"tokens": [B,S], "vis": [B,Sv,Dv]}   (stub frontend)
+    enc-dec:      {"frames": [B,Se,d], "tokens": [B,S]} (stub conv frontend)
+    classifiers:  {"image": [B,...]}.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.stacks import make_stack
+from repro.models import classifiers
+from repro.nn import param
+
+PyTree = Any
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init_tower: Callable  # rng -> Annotated params (ONE client tower)
+    init_server: Callable  # rng -> Annotated params
+    tower_forward: Callable  # (tp, inputs) -> smashed
+    server_forward: Callable  # (sp, smashed) -> (logits, aux)
+    # serving (None for classifier families)
+    tower_prefill: Optional[Callable] = None  # (tp, inputs, max_len) -> (smashed, tcache)
+    server_prefill: Optional[Callable] = None  # (sp, smashed, max_len) -> (logits, scache)
+    tower_decode: Optional[Callable] = None  # (tp, inputs_t, tcache, pos) -> (smashed_t, tcache)
+    server_decode: Optional[Callable] = None  # (sp, smashed_t, scache, pos) -> (logits, scache)
+    init_tower_cache: Optional[Callable] = None  # (batch, cap) -> cache
+    init_server_cache: Optional[Callable] = None
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LMs (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_model(cfg: ModelConfig) -> Model:
+    kinds = cfg.layer_kinds
+    split = cfg.split_layers
+    assert 0 < split < cfg.num_layers, (split, cfg.num_layers)
+    tower_stack = make_stack(cfg, kinds[:split],
+                             has_shared="shared_attn" in kinds[:split])
+    server_stack = make_stack(cfg, kinds[split:],
+                              has_shared="shared_attn" in kinds[split:])
+    is_vlm = cfg.family == "vlm"
+
+    def init_tower(rng):
+        ks = jax.random.split(rng, 3)
+        p = {"embed": L.embedding_params(ks[0], cfg), "blocks": tower_stack.init(ks[1])}
+        if is_vlm:
+            p["projector"] = {
+                "w": param(ks[2], (cfg.vis_dim, cfg.d_model), ("embed", None),
+                           dtype=jnp.dtype(cfg.param_dtype))
+            }
+        return p
+
+    def init_server(rng):
+        ks = jax.random.split(rng, 3)
+        return {
+            "blocks": server_stack.init(ks[0]),
+            "norm": L.rmsnorm_params(ks[1], cfg.d_model),
+            "head": {"w": param(ks[2], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                dtype=jnp.dtype(cfg.param_dtype))},
+        }
+
+    def _ctx(tp_or_none, inputs):
+        ctx = {}
+        if is_vlm:
+            vis = inputs["vis_proj"] if "vis_proj" in inputs else None
+            ctx["xattn"] = vis
+        return ctx
+
+    def tower_forward(tp, inputs):
+        x = L.embed(tp["embed"], inputs["tokens"], cfg)
+        extras = {}
+        ctx = {}
+        if is_vlm:
+            vis = jnp.einsum("bsd,de->bse", inputs["vis"].astype(x.dtype),
+                             tp["projector"]["w"].astype(x.dtype))
+            ctx["xattn"] = vis
+            extras["vis_proj"] = vis
+        x, _ = tower_stack.forward(tp["blocks"], x, ctx)
+        return {"h": x, **extras}
+
+    def _seq_shard(x):
+        # sequence parallelism (§Perf knob): split the server residual stream
+        # over the model axis too. Single-pod spec; lowered under `with mesh:`.
+        if cfg.seq_shard:
+            from jax.sharding import PartitionSpec as P
+
+            x = jax.lax.with_sharding_constraint(x, P("data", "model", None))
+        return x
+
+    def server_forward(sp, smashed):
+        ctx = {}
+        if is_vlm:
+            ctx["xattn"] = smashed["vis_proj"]
+        x, aux = server_stack.forward(sp["blocks"], _seq_shard(smashed["h"]), ctx)
+        x = L.rmsnorm(sp["norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", x, sp["head"]["w"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, aux
+
+    def tower_prefill(tp, inputs, max_len):
+        x = L.embed(tp["embed"], inputs["tokens"], cfg)
+        ctx = {"max_len": max_len}
+        extras = {}
+        if is_vlm:
+            vis = jnp.einsum("bsd,de->bse", inputs["vis"].astype(x.dtype),
+                             tp["projector"]["w"].astype(x.dtype))
+            ctx["xattn"] = vis
+            extras["vis_proj"] = vis
+        x, cache = tower_stack.prefill(tp["blocks"], x, ctx)
+        return {"h": x, **extras}, cache
+
+    def server_prefill(sp, smashed, max_len):
+        ctx = {"max_len": max_len}
+        if is_vlm:
+            ctx["xattn"] = smashed["vis_proj"]
+        x, cache = server_stack.prefill(sp["blocks"], smashed["h"], ctx)
+        x = L.rmsnorm(sp["norm"], x[:, -1:], cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", x, sp["head"]["w"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, cache
+
+    def tower_decode(tp, inputs_t, tcache, pos):
+        x = L.embed(tp["embed"], inputs_t["tokens"], cfg)  # [B,1]
+        ctx = {"pos": pos}
+        extras = {}
+        if is_vlm:
+            ctx["xattn"] = inputs_t["vis_proj"]
+            extras["vis_proj"] = inputs_t["vis_proj"]
+        x, tcache = tower_stack.decode(tp["blocks"], x, tcache, ctx)
+        return {"h": x, **extras}, tcache
+
+    def server_decode(sp, smashed_t, scache, pos):
+        ctx = {"pos": pos}
+        if is_vlm:
+            ctx["xattn"] = smashed_t["vis_proj"]
+        x, scache = server_stack.decode(sp["blocks"], smashed_t["h"], scache, ctx)
+        x = L.rmsnorm(sp["norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", x, sp["head"]["w"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, scache
+
+    return Model(
+        cfg=cfg,
+        init_tower=init_tower,
+        init_server=init_server,
+        tower_forward=tower_forward,
+        server_forward=server_forward,
+        tower_prefill=tower_prefill,
+        server_prefill=server_prefill,
+        tower_decode=tower_decode,
+        server_decode=server_decode,
+        init_tower_cache=tower_stack.init_cache,
+        init_server_cache=server_stack.init_cache,
+    )
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    split = cfg.split_layers
+    assert 0 < split <= cfg.encoder_layers
+    # encoder blocks are bidirectional ("bidir" kind); decoder blocks are
+    # causal self-attn + cross-attn to the encoder output ("cross" kind).
+    tower_stack = make_stack(cfg, ("bidir",) * split)
+    enc_top_stack = make_stack(cfg, ("bidir",) * (cfg.encoder_layers - split)) \
+        if cfg.encoder_layers > split else None
+    dec_stack = make_stack(cfg, ("cross",) * cfg.num_layers)
+
+    def init_tower(rng):
+        return {"blocks": tower_stack.init(rng)}
+
+    def init_server(rng):
+        ks = jax.random.split(rng, 6)
+        p = {
+            "enc_norm": L.rmsnorm_params(ks[1], cfg.d_model),
+            "dec_embed": L.embedding_params(ks[2], cfg),
+            "dec_blocks": dec_stack.init(ks[3]),
+            "norm": L.rmsnorm_params(ks[4], cfg.d_model),
+            "head": {"w": param(ks[5], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                dtype=jnp.dtype(cfg.param_dtype))},
+        }
+        if enc_top_stack is not None:
+            p["enc_blocks"] = enc_top_stack.init(ks[0])
+        return p
+
+    def tower_forward(tp, inputs):
+        # frames: [B, Se, d_model] precomputed stub embeddings. tokens ride
+        # along in the smashed data (MTSL uploads labels to the server).
+        x = inputs["frames"].astype(jnp.dtype(cfg.dtype))
+        x, _ = tower_stack.forward(tp["blocks"], x, {})
+        return {"h": x, "tokens": inputs["tokens"]}
+
+    def _encode_top(sp, h):
+        if enc_top_stack is not None:
+            h, _ = enc_top_stack.forward(sp["enc_blocks"], h, {})
+        return L.rmsnorm(sp["enc_norm"], h, cfg.norm_eps)
+
+    def server_forward(sp, smashed):
+        enc_out = _encode_top(sp, smashed["h"])
+        y = L.embed(sp["dec_embed"], smashed["tokens"], cfg)
+        y, aux = dec_stack.forward(sp["dec_blocks"], y, {"xattn": enc_out})
+        y = L.rmsnorm(sp["norm"], y, cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", y, sp["head"]["w"].astype(y.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, aux
+
+    def tower_prefill(tp, inputs, max_len):
+        return tower_forward(tp, inputs), {}
+
+    def server_prefill(sp, smashed, max_len):
+        enc_out = _encode_top(sp, smashed["h"])
+        y = L.embed(sp["dec_embed"], smashed["tokens"], cfg)
+        y, cache = dec_stack.prefill(sp["dec_blocks"], y, {"xattn": enc_out, "max_len": max_len})
+        y = L.rmsnorm(sp["norm"], y[:, -1:], cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", y, sp["head"]["w"].astype(y.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, {"dec": cache, "enc_out": enc_out}
+
+    def tower_decode(tp, inputs_t, tcache, pos):
+        # encoder is static during decode; only the next token travels
+        return {"tokens": inputs_t["tokens"]}, tcache
+
+    def server_decode(sp, smashed_t, scache, pos):
+        y = L.embed(sp["dec_embed"], smashed_t["tokens"], cfg)  # [B,1]
+        y, dcache = dec_stack.decode(sp["dec_blocks"], y, scache["dec"],
+                                     {"xattn": scache["enc_out"], "pos": pos})
+        y = L.rmsnorm(sp["norm"], y, cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", y, sp["head"]["w"].astype(y.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, {"dec": dcache, "enc_out": scache["enc_out"]}
+
+    def init_server_cache(batch, cap):
+        return {
+            "dec": dec_stack.init_cache(batch, cap),
+            "enc_out": jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+
+    return Model(
+        cfg=cfg,
+        init_tower=init_tower,
+        init_server=init_server,
+        tower_forward=tower_forward,
+        server_forward=server_forward,
+        tower_prefill=tower_prefill,
+        server_prefill=server_prefill,
+        tower_decode=tower_decode,
+        server_decode=server_decode,
+        init_tower_cache=lambda batch, cap: {},
+        init_server_cache=init_server_cache,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "ssm", "hybrid", "vlm"):
+        return _decoder_model(cfg)
+    if cfg.family == "encdec":
+        return _encdec_model(cfg)
+    if cfg.family == "mlp":
+        return classifiers.mlp_model(cfg)
+    if cfg.family == "resnet":
+        return classifiers.resnet_model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

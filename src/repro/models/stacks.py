@@ -1,0 +1,427 @@
+"""Layer-stack assembly: blocks -> segments -> scan/unroll, with remat and
+stacked (scan-compatible) parameters + caches.
+
+A stack is described by the per-layer `kinds` tuple from ModelConfig. Kinds
+are grouped into maximal repeating segments; segments with >=2 repeats and
+cfg.scan_layers are executed with jax.lax.scan over stacked params (keeps the
+HLO small for 88-layer models), otherwise unrolled.
+
+Zamba2's *shared* attention block is loop-invariant: its parameters live at
+the stack level ("shared") and are threaded through the scan as a captured
+input; every application still gets its own KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import moe_forward, moe_params
+from repro.models.ssm import (
+    init_mamba_cache,
+    mamba_decode,
+    mamba_forward,
+    mamba_params,
+    mamba_prefill,
+)
+from repro.nn import abstract_mode
+from repro.utils.sharding import Annotated, strip, axes_of
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-kind block definitions
+# ---------------------------------------------------------------------------
+
+
+class Block(NamedTuple):
+    init: Callable  # rng -> Annotated params
+    forward: Callable  # (p, x, ctx) -> (x, aux)
+    prefill: Callable  # (p, x, ctx) -> (x, cache)
+    decode: Callable  # (p, x_t, cache, ctx) -> (x_t, cache)
+    init_cache: Callable  # (batch, cap) -> cache pytree
+
+
+def _attn_mlp_block(cfg: ModelConfig, window: int, causal: bool = True) -> Block:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"attn": L.attn_params(k1, cfg), "mlp": L.mlp_params(k2, cfg)}
+
+    def forward(p, x, ctx):
+        x = x + L.attn_forward(p["attn"], x, cfg, window=window, causal=causal,
+                               use_flash=cfg.use_flash_kernel)
+        x = x + L.mlp_forward(p["mlp"], x, cfg)
+        return x, 0.0
+
+    def prefill(p, x, ctx):
+        a, cache = L.attn_prefill(p["attn"], x, cfg, window=window, max_len=ctx["max_len"])
+        x = x + a
+        x = x + L.mlp_forward(p["mlp"], x, cfg)
+        return x, cache
+
+    def decode(p, x_t, cache, ctx):
+        a, cache = L.attn_decode(p["attn"], x_t, cache, ctx["pos"], cfg, window=window)
+        x_t = x_t + a
+        x_t = x_t + L.mlp_forward(p["mlp"], x_t, cfg)
+        return x_t, cache
+
+    def init_cache(batch, cap):
+        return L.init_attn_cache(cfg, batch, cap, window=window)
+
+    return Block(init, forward, prefill, decode, init_cache)
+
+
+def _cross_block(cfg: ModelConfig, self_window: int = 0) -> Block:
+    """Self-attn + cross-attn (to ctx['xattn']) + MLP (VLM / enc-dec dec)."""
+
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "attn": L.attn_params(k1, cfg),
+            "xattn": L.attn_params(k2, cfg, cross=True),
+            "mlp": L.mlp_params(k3, cfg),
+        }
+
+    def forward(p, x, ctx):
+        x = x + L.attn_forward(p["attn"], x, cfg, window=self_window,
+                               use_flash=cfg.use_flash_kernel)
+        x = x + L.attn_forward(p["xattn"], x, cfg, kv_src=ctx["xattn"])
+        x = x + L.mlp_forward(p["mlp"], x, cfg)
+        return x, 0.0
+
+    def prefill(p, x, ctx):
+        a, cache = L.attn_prefill(p["attn"], x, cfg, window=self_window, max_len=ctx["max_len"])
+        x = x + a
+        x = x + L.attn_forward(p["xattn"], x, cfg, kv_src=ctx["xattn"])
+        x = x + L.mlp_forward(p["mlp"], x, cfg)
+        return x, cache
+
+    def decode(p, x_t, cache, ctx):
+        a, cache = L.attn_decode(p["attn"], x_t, cache, ctx["pos"], cfg, window=self_window)
+        x_t = x_t + a
+        xa, _ = L.attn_decode(p["xattn"], x_t, None, ctx["pos"], cfg, kv_src=ctx["xattn"])
+        x_t = x_t + xa
+        x_t = x_t + L.mlp_forward(p["mlp"], x_t, cfg)
+        return x_t, cache
+
+    def init_cache(batch, cap):
+        return L.init_attn_cache(cfg, batch, cap, window=self_window)
+
+    return Block(init, forward, prefill, decode, init_cache)
+
+
+def _moe_block(cfg: ModelConfig) -> Block:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"attn": L.attn_params(k1, cfg), "moe": moe_params(k2, cfg)}
+
+    def forward(p, x, ctx):
+        x = x + L.attn_forward(p["attn"], x, cfg, use_flash=cfg.use_flash_kernel)
+        y, aux = moe_forward(p["moe"], x, cfg)
+        return x + y, aux * cfg.router_aux_weight
+
+    def prefill(p, x, ctx):
+        a, cache = L.attn_prefill(p["attn"], x, cfg, max_len=ctx["max_len"])
+        x = x + a
+        y, _ = moe_forward(p["moe"], x, cfg)
+        return x + y, cache
+
+    def decode(p, x_t, cache, ctx):
+        a, cache = L.attn_decode(p["attn"], x_t, cache, ctx["pos"], cfg)
+        x_t = x_t + a
+        y, _ = moe_forward(p["moe"], x_t, cfg)
+        return x_t + y, cache
+
+    def init_cache(batch, cap):
+        return L.init_attn_cache(cfg, batch, cap)
+
+    return Block(init, forward, prefill, decode, init_cache)
+
+
+def _mamba_block(cfg: ModelConfig) -> Block:
+    def init(rng):
+        return {"mamba": mamba_params(rng, cfg)}
+
+    def forward(p, x, ctx):
+        return x + mamba_forward(p["mamba"], x, cfg), 0.0
+
+    def prefill(p, x, ctx):
+        y, cache = mamba_prefill(p["mamba"], x, cfg)
+        return x + y, cache
+
+    def decode(p, x_t, cache, ctx):
+        y, cache = mamba_decode(p["mamba"], x_t, cache, cfg)
+        return x_t + y, cache
+
+    def init_cache(batch, cap):
+        return init_mamba_cache(cfg, batch)
+
+    return Block(init, forward, prefill, decode, init_cache)
+
+
+def _shared_attn_block(cfg: ModelConfig) -> Block:
+    """Zamba2-style layer: apply the stack-level *shared* attention+MLP block
+    (params from ctx['shared']; per-application KV cache), then its own mamba.
+    """
+    mamba = _mamba_block(cfg)
+
+    def init(rng):
+        return mamba.init(rng)
+
+    def forward(p, x, ctx):
+        sp = ctx["shared"]
+        x = x + L.attn_forward(sp["attn"], x, cfg, use_flash=cfg.use_flash_kernel)
+        x = x + L.mlp_forward(sp["mlp"], x, cfg)
+        return mamba.forward(p, x, ctx)
+
+    def prefill(p, x, ctx):
+        sp = ctx["shared"]
+        a, acache = L.attn_prefill(sp["attn"], x, cfg, max_len=ctx["max_len"])
+        x = x + a
+        x = x + L.mlp_forward(sp["mlp"], x, cfg)
+        x, mcache = mamba.prefill(p, x, ctx)
+        return x, {"attn": acache, "mamba": mcache}
+
+    def decode(p, x_t, cache, ctx):
+        sp = ctx["shared"]
+        a, acache = L.attn_decode(sp["attn"], x_t, cache["attn"], ctx["pos"], cfg)
+        x_t = x_t + a
+        x_t = x_t + L.mlp_forward(sp["mlp"], x_t, cfg)
+        x_t, mcache = mamba.decode(p, x_t, cache["mamba"], ctx)
+        return x_t, {"attn": acache, "mamba": mcache}
+
+    def init_cache(batch, cap):
+        return {
+            "attn": L.init_attn_cache(cfg, batch, cap),
+            "mamba": init_mamba_cache(cfg, batch),
+        }
+
+    return Block(init, forward, prefill, decode, init_cache)
+
+
+def make_block(cfg: ModelConfig, kind: str) -> Block:
+    if kind == "full":
+        return _attn_mlp_block(cfg, window=0)
+    if kind == "swa":
+        return _attn_mlp_block(cfg, window=cfg.sliding_window)
+    if kind == "bidir":  # encoder blocks (whisper): non-causal full attention
+        return _attn_mlp_block(cfg, window=0, causal=False)
+    if kind == "cross":
+        return _cross_block(cfg)
+    if kind == "moe":
+        return _moe_block(cfg)
+    if kind == "dense_moe_lead":
+        return _attn_mlp_block(cfg, window=0)
+    if kind == "mamba":
+        return _mamba_block(cfg)
+    if kind == "shared_attn":
+        return _shared_attn_block(cfg)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# segmentation of the kinds list into repeating units
+# ---------------------------------------------------------------------------
+
+
+def segment_layers(kinds: Sequence[str], max_unit: int = 12):
+    """Greedy maximal-repeat segmentation -> [(unit_kinds, repeats), ...]."""
+    kinds = tuple(kinds)
+    segments = []
+    i, n = 0, len(kinds)
+    while i < n:
+        best_u, best_r = 1, 1
+        for u in range(1, min(n - i, max_unit) + 1):
+            r = 1
+            while i + (r + 1) * u <= n and kinds[i + r * u : i + (r + 1) * u] == kinds[i : i + u]:
+                r += 1
+            if u * r > best_u * best_r or (u * r == best_u * best_r and u < best_u):
+                best_u, best_r = u, r
+        segments.append((kinds[i : i + best_u], best_r))
+        i += best_u * best_r
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# stacked-parameter helpers
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, rng, n: int) -> PyTree:
+    """Stack n independently-initialized param trees along a leading 'layers'
+    axis. In abstract mode this is a pure shape transformation."""
+    if abstract_mode():
+        t = init_fn(rng)
+
+        def _stk(a: Annotated):
+            sds = jax.ShapeDtypeStruct((n,) + tuple(a.value.shape), a.value.dtype)
+            return Annotated(sds, ("layers",) + a.axes)
+
+        return jax.tree.map(_stk, t, is_leaf=lambda x: isinstance(x, Annotated))
+    template = init_fn(rng)  # one concrete tree for the axes
+    rngs = jax.random.split(jax.random.fold_in(rng, 1), n)
+    vals = jax.vmap(lambda r: strip(init_fn(r)))(rngs)
+    ax = axes_of(template)
+    flat_v, treedef = jax.tree.flatten(vals)
+    flat_a = treedef.flatten_up_to(ax)
+    out = [Annotated(v, ("layers",) + tuple(a)) for v, a in zip(flat_v, flat_a)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn)  # "block"
+
+
+# ---------------------------------------------------------------------------
+# the Stack
+# ---------------------------------------------------------------------------
+
+
+class Stack(NamedTuple):
+    init: Callable  # rng -> Annotated params
+    forward: Callable  # (p, x, ctx) -> (x, aux)
+    prefill: Callable  # (p, x, ctx) -> (x, caches)
+    decode: Callable  # (p, x_t, caches, ctx) -> (x_t, caches)
+    init_cache: Callable  # (batch, cap) -> caches
+    num_layers: int
+
+
+def make_stack(cfg: ModelConfig, kinds: Sequence[str], has_shared: bool = False) -> Stack:
+    """Build a stack over `kinds`. If has_shared, a stack-level shared
+    attention+MLP block is created and passed via ctx['shared']."""
+    kinds = tuple(kinds)
+    segments = segment_layers(kinds)
+    seg_blocks = [tuple(make_block(cfg, k) for k in unit) for unit, _ in segments]
+    seg_repeats = [r if cfg.scan_layers else 1 for (_, r) in segments]
+    # when not scanning, expand segments to fully unrolled
+    if not cfg.scan_layers:
+        seg_blocks = [tuple(make_block(cfg, k) for k in kinds)]
+        segments = [(kinds, 1)]
+        seg_repeats = [1]
+
+    def init(rng):
+        p = {}
+        if has_shared:
+            k1, k2, rng = jax.random.split(rng, 3)
+            p["shared"] = {
+                "attn": L.attn_params(k1, cfg),
+                "mlp": L.mlp_params(k2, cfg),
+            }
+        for si, (blocks, (unit, _), rep) in enumerate(zip(seg_blocks, segments, seg_repeats)):
+            rng, sk = jax.random.split(rng)
+
+            def unit_init(r, blocks=blocks):
+                ks = jax.random.split(r, len(blocks))
+                return {str(j): b.init(ks[j]) for j, b in enumerate(blocks)}
+
+            if rep > 1:
+                p[f"seg{si}"] = _stack_init(unit_init, sk, rep)
+            else:
+                p[f"seg{si}"] = unit_init(sk)
+        return p
+
+    def _ctx_with_shared(p, ctx):
+        if has_shared:
+            ctx = dict(ctx)
+            ctx["shared"] = p["shared"]
+        return ctx
+
+    def forward(p, x, ctx):
+        ctx = _ctx_with_shared(p, ctx)
+        aux_total = jnp.zeros((), jnp.float32)
+        for si, (blocks, rep) in enumerate(zip(seg_blocks, seg_repeats)):
+            sp = p[f"seg{si}"]
+
+            def unit_fwd(px, x, blocks=blocks, ctx=ctx):
+                aux = 0.0
+                for j, b in enumerate(blocks):
+                    x, a = b.forward(px[str(j)], x, ctx)
+                    aux = aux + a
+                return x, aux
+
+            unit_fwd = _remat(unit_fwd, cfg)
+            if rep > 1:
+                def scan_body(carry, px, unit_fwd=unit_fwd):
+                    x, aux = carry
+                    x, a = unit_fwd(px, x)
+                    return (x, aux + a), None
+
+                (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total), sp)
+            else:
+                x, a = unit_fwd(sp, x)
+                aux_total = aux_total + a
+        return x, aux_total
+
+    def prefill(p, x, ctx):
+        ctx = _ctx_with_shared(p, ctx)
+        caches = {}
+        for si, (blocks, rep) in enumerate(zip(seg_blocks, seg_repeats)):
+            sp = p[f"seg{si}"]
+
+            def unit_pf(px, x, blocks=blocks, ctx=ctx):
+                cs = {}
+                for j, b in enumerate(blocks):
+                    x, c = b.prefill(px[str(j)], x, ctx)
+                    cs[str(j)] = c
+                return x, cs
+
+            if rep > 1:
+                def scan_body(x, px, unit_pf=unit_pf):
+                    x, cs = unit_pf(px, x)
+                    return x, cs
+
+                x, cs = jax.lax.scan(scan_body, x, sp)
+            else:
+                x, cs = unit_pf(sp, x)
+            caches[f"seg{si}"] = cs
+        return x, caches
+
+    def decode(p, x_t, caches, ctx):
+        ctx = _ctx_with_shared(p, ctx)
+        new_caches = {}
+        for si, (blocks, rep) in enumerate(zip(seg_blocks, seg_repeats)):
+            sp = p[f"seg{si}"]
+            cs = caches[f"seg{si}"]
+
+            def unit_dec(px, x_t, cx, blocks=blocks, ctx=ctx):
+                ncs = {}
+                for j, b in enumerate(blocks):
+                    x_t, nc = b.decode(px[str(j)], x_t, cx[str(j)], ctx)
+                    ncs[str(j)] = nc
+                return x_t, ncs
+
+            if rep > 1:
+                def scan_body(x_t, pc, unit_dec=unit_dec):
+                    px, cx = pc
+                    x_t, nc = unit_dec(px, x_t, cx)
+                    return x_t, nc
+
+                x_t, ncs = jax.lax.scan(scan_body, x_t, (sp, cs))
+            else:
+                x_t, ncs = unit_dec(sp, x_t, cs)
+            new_caches[f"seg{si}"] = ncs
+        return x_t, new_caches
+
+    def init_cache(batch, cap):
+        caches = {}
+        for si, (blocks, rep) in enumerate(zip(seg_blocks, seg_repeats)):
+            unit_c = {str(j): b.init_cache(batch, cap) for j, b in enumerate(blocks)}
+            if rep > 1:
+                unit_c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (rep,) + a.shape).copy()
+                    if not isinstance(a, jax.ShapeDtypeStruct)
+                    else jax.ShapeDtypeStruct((rep,) + a.shape, a.dtype),
+                    unit_c,
+                )
+            caches[f"seg{si}"] = unit_c
+        return caches
+
+    return Stack(init, forward, prefill, decode, init_cache, len(kinds))

@@ -1,0 +1,9 @@
+from repro.nn.init import (
+    param,
+    truncated_normal,
+    zeros,
+    ones,
+    uniform_scale,
+    abstract_params,
+    abstract_mode,
+)

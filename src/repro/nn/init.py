@@ -1,0 +1,91 @@
+"""Parameter creation: initializers + logical-axis annotation.
+
+Parameters are plain jnp arrays wrapped in `sharding.Annotated` carrying
+per-dim logical names ("vocab", "embed", "heads", ...). Layer builders create
+them; `sharding.strip` / `sharding.axes_of` separate values from annotations.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.sharding import Annotated
+
+# --- abstract-param mode: param() returns ShapeDtypeStructs (no allocation,
+# no rng consumption). Used by the dry-run to build full-size param trees and
+# shardings for 100B+ models without materializing anything.
+_MODE = threading.local()
+
+
+def abstract_mode() -> bool:
+    return getattr(_MODE, "abstract", False)
+
+
+@contextlib.contextmanager
+def abstract_params():
+    prev = abstract_mode()
+    _MODE.abstract = True
+    try:
+        yield
+    finally:
+        _MODE.abstract = prev
+
+
+def truncated_normal(rng, shape, stddev=0.02, dtype=jnp.float32):
+    return jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32).astype(
+        dtype
+    ) * jnp.asarray(stddev, dtype)
+
+
+def zeros(rng, shape, dtype=jnp.float32):
+    del rng
+    return jnp.zeros(shape, dtype)
+
+
+def ones(rng, shape, dtype=jnp.float32):
+    del rng
+    return jnp.ones(shape, dtype)
+
+
+def uniform_scale(rng, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(rng, shape, jnp.float32, -scale, scale).astype(dtype)
+
+
+_INITS = {
+    "normal": lambda rng, shape, dtype, fan_in: truncated_normal(
+        rng, shape, 0.02, dtype
+    ),
+    "fan_in": lambda rng, shape, dtype, fan_in: truncated_normal(
+        rng, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype
+    ),
+    "zeros": lambda rng, shape, dtype, fan_in: zeros(rng, shape, dtype),
+    "ones": lambda rng, shape, dtype, fan_in: ones(rng, shape, dtype),
+}
+
+
+def param(
+    rng,
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    init: str = "fan_in",
+    dtype=jnp.float32,
+    fan_in: Optional[int] = None,
+) -> Annotated:
+    """Create an annotated parameter.
+
+    `axes` must have one logical name (or None) per dim; `fan_in` defaults to
+    the second-to-last dim (matmul convention W[..., in, out]).
+    """
+    shape = tuple(int(s) for s in shape)
+    assert len(axes) == len(shape), (axes, shape)
+    if abstract_mode():
+        return Annotated(jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), axes)
+    if fan_in is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    value = _INITS[init](rng, shape, dtype, fan_in)
+    return Annotated(value, axes)

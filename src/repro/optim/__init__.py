@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adamw,
+    apply_updates,
+)
+from repro.optim.per_component import (
+    ComponentLR,
+    per_component_lr,
+    lipschitz_lr,
+)
+from repro.optim.schedules import constant, cosine, warmup_cosine, inverse_sqrt

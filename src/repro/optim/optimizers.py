@@ -1,0 +1,106 @@
+"""Minimal functional optimizer library (no optax dependency).
+
+An Optimizer is a pair (init, update):
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+`update` returns *deltas* to be added to params (already scaled by -lr), so
+per-component LR wrappers (the paper's technique) compose as a final
+rescaling stage — see per_component.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]  # (grads, state, params, step) -> (updates, state)
+
+
+def _sched(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: Union[float, Schedule]) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None, step=0):
+        s = lr_fn(step)
+        return jax.tree.map(lambda g: -s * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Union[float, Schedule], beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None, step=0):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: g + beta * m, new_m, grads)
+        else:
+            upd = new_m
+        s = lr_fn(step)
+        return jax.tree.map(lambda u: -s * u, upd), new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr: Union[float, Schedule],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(mu=z, nu=jax.tree.map(jnp.copy, z))
+
+    def update(grads, state, params=None, step=0):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1**step), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2**step), nu)
+        s = lr_fn(step - 1)
+
+        def _upd(m, v, p):
+            u = m / (jnp.sqrt(v) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -s * u
+
+        upd = jax.tree.map(_upd, mu_hat, nu_hat, params if params is not None else mu_hat)
+        return upd, AdamState(mu=mu, nu=nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(peak: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def inverse_sqrt(peak: float, warmup_steps: int = 100):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        return peak * jnp.minimum(step / warmup_steps, jnp.sqrt(warmup_steps / step))
+
+    return fn

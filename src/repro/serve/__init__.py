@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeEngine, build_prefill_step, build_decode_step

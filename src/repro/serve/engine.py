@@ -1,0 +1,108 @@
+"""Serving engine: batched prefill + single-token decode over the split
+(tower/server) models — MTSL-aware: each request carries a client id and is
+served by that client's private tower + the shared server stack.
+
+The lowered entry points are exactly what the dry-run compiles for the
+decode_32k / long_500k shapes:
+    prefill_step(params, inputs)            -> (logits, caches)
+    decode_step(params, caches, token, pos) -> (logits, caches)
+Requests are grouped by client: batch layout [M, b, ...] like training.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+PyTree = Any
+
+
+class ServeCaches(NamedTuple):
+    tower: PyTree  # vmapped over clients: leading M axis
+    server: PyTree
+    extras: PyTree  # e.g. vis_proj for VLM decode
+
+
+def build_prefill_step(model: Model, num_clients: int, max_len: int) -> Callable:
+    M = num_clients
+
+    def prefill_step(params, inputs):
+        """inputs: {tokens: [M,b,S], ...} -> (last-token logits [M*b,1,V], caches)."""
+        smashed, tcache = jax.vmap(
+            lambda tp, inp: model.tower_prefill(tp, inp, max_len)
+        )(params["towers"], inputs)
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), smashed)
+        logits, scache = model.server_prefill(params["server"], flat, max_len)
+        extras = {k: v for k, v in flat.items() if k not in ("h", "tokens")}
+        return logits, ServeCaches(tower=tcache, server=scache, extras=extras)
+
+    return prefill_step
+
+
+def build_decode_step(model: Model, num_clients: int) -> Callable:
+    M = num_clients
+
+    def decode_step(params, caches: ServeCaches, tokens, pos):
+        """tokens: [M, b, 1] next input token; pos: scalar. -> (logits, caches)."""
+        inputs_t = {"tokens": tokens}
+        if "vis_proj" in caches.extras:
+            vp = caches.extras["vis_proj"]
+            inputs_t["vis_proj"] = vp.reshape((M, -1) + vp.shape[1:])
+
+        smashed_t, tcache = jax.vmap(
+            lambda tp, inp, tc: model.tower_decode(tp, inp, tc, pos)
+        )(params["towers"], inputs_t, caches.tower)
+        flat = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:]) if x is not None else x,
+            smashed_t,
+        )
+        logits, scache = model.server_decode(params["server"], flat, caches.server, pos)
+        return logits, ServeCaches(tower=tcache, server=scache, extras=caches.extras)
+
+    return decode_step
+
+
+class ServeEngine:
+    """Host-side orchestration: greedy/temperature generation over the jitted
+    prefill/decode steps."""
+
+    def __init__(self, model: Model, params, num_clients: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.M = num_clients
+        self.max_len = max_len
+        self._prefill = jax.jit(build_prefill_step(model, num_clients, max_len))
+        self._decode = jax.jit(build_decode_step(model, num_clients))
+
+    def generate(
+        self,
+        inputs,
+        new_tokens: int,
+        temperature: float = 0.0,
+        rng: Optional[jax.Array] = None,
+    ):
+        """inputs: {tokens: [M,b,S], ...}; returns [M, b, new_tokens]."""
+        M = self.M
+        prompt = inputs["tokens"]
+        b, S = prompt.shape[1], prompt.shape[2]
+        logits, caches = self._prefill(self.params, inputs)
+        out = []
+        tok = self._sample(logits, temperature, rng, 0).reshape(M, b, 1)
+        for t in range(new_tokens):
+            out.append(tok)
+            if t == new_tokens - 1:
+                break
+            logits, caches = self._decode(self.params, caches, tok, S + t)
+            tok = self._sample(logits, temperature, rng, t + 1).reshape(M, b, 1)
+        return jnp.concatenate(out, axis=-1)
+
+    @staticmethod
+    def _sample(logits, temperature, rng, step):
+        logits = logits[:, -1, :]
+        if temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(rng, step)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)

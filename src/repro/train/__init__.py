@@ -1,0 +1,2 @@
+from repro.train.loop import train, TrainConfig
+from repro.train.checkpoint import save_checkpoint, load_checkpoint

@@ -1,0 +1,63 @@
+"""Checkpointing: msgpack-serialized pytrees (params / opt state / step).
+
+No orbax dependency; arrays are stored as (dtype, shape, raw bytes) and the
+tree structure as nested dicts/lists. Good enough for single-host training
+and the paper-scale experiments; sharded checkpointing for the production
+mesh would hook here (one file per shard, same format).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_KIND = "__nd__"
+
+
+def _pack(obj):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        a = np.asarray(obj)
+        return {
+            _KIND: True,
+            "dtype": str(a.dtype),
+            "shape": list(a.shape),
+            "data": a.tobytes(),
+        }
+    if isinstance(obj, dict):
+        return {str(k): _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__list__": [_pack(v) for v in obj], "__tuple__": isinstance(obj, tuple)}
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get(_KIND):
+            a = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+            return jnp.asarray(a.reshape(obj["shape"]))
+        if "__list__" in obj:
+            seq = [_unpack(v) for v in obj["__list__"]]
+            return tuple(seq) if obj.get("__tuple__") else seq
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save_checkpoint(path: str, tree: PyTree) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(jax.device_get(tree)), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str) -> PyTree:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))

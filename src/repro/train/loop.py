@@ -1,0 +1,74 @@
+"""Training loop: drives (data -> train_step -> metrics/eval/checkpoint)
+for any algorithm in {mtsl, splitfed, fedavg} (FedEM has its own loop in
+benchmarks — its state shape differs).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mtsl import TrainState, build_eval_step, build_train_step, init_state
+from repro.models.registry import Model
+from repro.optim.optimizers import Optimizer
+from repro.optim.per_component import ComponentLR
+from repro.train.checkpoint import save_checkpoint
+from repro.utils.sharding import strip
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    algorithm: str = "mtsl"
+    log_every: int = 20
+    eval_every: int = 0
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+    microbatches: int = 1
+    seed: int = 0
+
+
+def train(
+    model: Model,
+    optimizer: Optimizer,
+    batches,
+    tcfg: TrainConfig,
+    num_clients: int,
+    component_lr: Optional[ComponentLR] = None,
+    eval_batches=None,
+    log: Callable[[str], None] = print,
+):
+    """Returns (final_state, history list of metric dicts)."""
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params = strip(init_state(model, optimizer, rng, num_clients, tcfg.algorithm))
+    state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(
+        build_train_step(model, optimizer, num_clients, tcfg.algorithm,
+                         microbatches=tcfg.microbatches)
+    )
+    eval_fn = jax.jit(build_eval_step(model, num_clients)) if eval_batches else None
+
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        if i >= tcfg.steps:
+            break
+        state, metrics = step_fn(state, batch, component_lr)
+        if (i + 1) % tcfg.log_every == 0 or i == 0:
+            m = {k: np.asarray(v) for k, v in metrics.items()}
+            entry = {"step": i + 1, "loss": float(m["loss"]),
+                     "time": time.time() - t0}
+            if eval_fn is not None and tcfg.eval_every and (i + 1) % tcfg.eval_every == 0:
+                ev = eval_fn(state.params, next(iter(eval_batches)))
+                entry["acc_mtl"] = float(ev.get("acc_mtl", float("nan")))
+            history.append(entry)
+            log(f"step {entry['step']:>6d}  loss {entry['loss']:.4f}"
+                + (f"  acc_mtl {entry['acc_mtl']:.3f}" if "acc_mtl" in entry else "")
+                + f"  ({entry['time']:.1f}s)")
+        if tcfg.checkpoint_path and tcfg.checkpoint_every and (i + 1) % tcfg.checkpoint_every == 0:
+            save_checkpoint(tcfg.checkpoint_path, {"params": state.params, "step": int(state.step)})
+    return state, history

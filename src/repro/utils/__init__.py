@@ -1,0 +1,3 @@
+from repro.utils import tree as tree
+from repro.utils import sharding as sharding
+from repro.utils import hlo as hlo

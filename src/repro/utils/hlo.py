@@ -1,0 +1,124 @@
+"""Parse compiled HLO text for collective traffic.
+
+cost_analysis() does not expose collective bytes, so the roofline's
+collective term comes from summing the operand sizes of every collective op
+in the compiled module — all-gather, all-reduce, reduce-scatter, all-to-all
+and collective-permute (plus their -start async forms).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# matches e.g.  f32[16,128,256]{2,1,0}  or bf16[4096]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 0)
+    if nbytes == 0:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _result_shapes(line: str) -> list[str]:
+    """Extract the result shape(s) of an HLO instruction line."""
+    # form:  %name = TYPE[...]  or  %name = (TYPE[..], TYPE[..]) op(...)
+    m = re.search(r"=\s*(\([^)]*\)|[\w\[\]{},.]+)\s+\w", line)
+    if not m:
+        return []
+    sig = m.group(1)
+    return _SHAPE_RE.findall(sig) and [
+        f"{dt}[{dims}]" for dt, dims in _SHAPE_RE.findall(sig)
+    ]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        rows = [
+            f"  {k:<22s} n={self.count_by_kind[k]:<5d} {v/1e9:9.3f} GB"
+            for k, v in sorted(self.bytes_by_kind.items())
+        ]
+        rows.append(f"  {'TOTAL':<22s}        {self.total_bytes/1e9:9.3f} GB")
+        return "\n".join(rows)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in an HLO module.
+
+    Result shape is used (for all-gather it's the gathered size; for
+    all-reduce the reduced size; for all-to-all/permute the shuffled size) —
+    a consistent proxy for bytes that cross links per participating device.
+    Async pairs are counted once via the -start op only.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        for kind in COLLECTIVE_KINDS:
+            # count x-start (async) or bare sync form; skip x-done (dup).
+            if re.search(rf"=\s*[\w\[\]{{}},.()\s]*?{kind}(-start)?\(", s):
+                if f"{kind}-done" in s:
+                    continue
+                shapes = _result_shapes(s)
+                nbytes = sum(_shape_bytes(x) for x in shapes)
+                stats.bytes_by_kind[kind] += nbytes
+                stats.count_by_kind[kind] += 1
+                break
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    """Count occurrences of an op (e.g. 'fusion', 'dot') in HLO text."""
+    return len(re.findall(rf"=\s*[\w\[\]{{}},.()\s]*?\b{opname}\(", hlo_text))
+
+
+def top_collectives(hlo_text: str, n: int = 10) -> list[tuple[str, str, int]]:
+    """The n largest collective ops: (kind, result signature, bytes).
+    Hillclimb diagnostic — shows WHICH tensors dominate the collective term."""
+    out = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in COLLECTIVE_KINDS:
+            if re.search(rf"=\s*[\w\[\]{{}},.()\s]*?{kind}(-start)?\(", s):
+                if f"{kind}-done" in s:
+                    continue
+                shapes = _result_shapes(s)
+                nbytes = sum(_shape_bytes(x) for x in shapes)
+                meta = ""
+                m = re.search(r'op_name="([^"]+)"', s)
+                if m:
+                    meta = m.group(1)[-70:]
+                out.append((kind, ";".join(shapes) + (f" [{meta}]" if meta else ""), nbytes))
+                break
+    out.sort(key=lambda t: -t[2])
+    return out[:n]

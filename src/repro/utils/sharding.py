@@ -1,0 +1,183 @@
+"""Sharding rules for the production mesh.
+
+Axis conventions (see launch/mesh.py):
+  - "model": tensor parallelism (attention heads, FFN hidden, expert axis,
+    vocab) — 16-way per pod.
+  - "data": data parallelism == the MTSL *client* axis. Client towers carry a
+    leading client dimension sharded here; server params are replicated over
+    it (or FSDP-sharded when cfg.fsdp is on).
+  - "pod": the multi-pod outer data axis; composes with "data" for clients.
+
+Divisibility rule: a dimension is only sharded if divisible by the axis size;
+otherwise it is replicated (e.g. 8 KV heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Logical axis annotations: every parameter creator tags dims with logical
+# names; mesh rules translate logical -> mesh axes, checking divisibility.
+# ---------------------------------------------------------------------------
+
+# logical name -> preferred mesh axes (tried in order; None = replicate)
+DEFAULT_RULES: dict[str, Optional[tuple]] = {
+    "client": ("pod", "data"),   # MTSL client axis (stacked towers)
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": None,               # d_model replicated by default (see fsdp)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ffn": ("model",),           # FFN hidden dim
+    "experts": ("model",),       # expert parallelism
+    "expert_ffn": None,
+    "seq": None,
+    "layers": None,              # scan-stacked layer dim
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    "conv_dim": ("model",),
+    "state": None,
+    "fsdp": ("data",),           # dim tagged for FSDP when enabled
+    "cap": None,
+    # KV-cache sequence dim: grabs whatever axes the client/batch dims left
+    # over — on decode_32k that's "model" (client took pod+data); on
+    # long_500k (batch 1) it's the whole mesh. This is how the 500k cache
+    # fits: 512-way sequence sharding.
+    "kv_seq": ("pod", "data", "model"),
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a] if a in mesh.shape else 1
+    return s
+
+
+def _present(mesh: Mesh, axes):
+    """Filter a logical-axis tuple down to axes present in this mesh."""
+    if axes is None:
+        return None
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(
+    mesh: Mesh,
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: Optional[dict] = None,
+) -> P:
+    """Translate per-dim logical names into a PartitionSpec for `mesh`.
+
+    Enforces divisibility: a dim whose size is not divisible by the mapped
+    axis size is replicated instead. Each mesh axis is used at most once.
+    """
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    used: set = set()
+    spec = []
+    for name, dim in zip(logical, shape):
+        axes = rules.get(name) if name is not None else None
+        axes = _present(mesh, axes)
+        if axes is None:
+            spec.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        # drop axes already used by earlier dims of this tensor, then drop
+        # leading axes until the remaining product divides the dim size.
+        tup = tuple(a for a in tup if a not in used)
+        while tup and dim % _axis_size(mesh, tup) != 0:
+            tup = tup[1:]
+        if not tup:
+            spec.append(None)
+            continue
+        used.update(tup)
+        spec.append(tup[0] if len(tup) == 1 else tup)
+    return P(*spec)
+
+
+def shard_like(mesh: Mesh, logical: Sequence[Optional[str]], shape, rules=None):
+    return NamedSharding(mesh, logical_to_spec(mesh, logical, shape, rules))
+
+
+# ---------------------------------------------------------------------------
+# Annotated parameter pytrees. Parameters are created as `(array_or_sds,
+# logical_axes)` pairs by the nn layer builders; these helpers strip / apply.
+# ---------------------------------------------------------------------------
+
+
+class Annotated:
+    """A leaf wrapper: value + logical axis names. Treated as a pytree leaf
+    container so tree.map over `.value` is explicit."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Annotated({getattr(self.value, 'shape', None)}, axes={self.axes})"
+
+
+def strip(tree: PyTree) -> PyTree:
+    """Annotated pytree -> raw value pytree."""
+    return jax.tree.map(
+        lambda x: x.value if isinstance(x, Annotated) else x,
+        tree,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )
+
+
+def axes_of(tree: PyTree) -> PyTree:
+    """Annotated pytree -> logical-axes pytree (same structure)."""
+    return jax.tree.map(
+        lambda x: x.axes if isinstance(x, Annotated) else None,
+        tree,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )
+
+
+def _zip_axes(value_tree: PyTree, axes_tree: PyTree):
+    """Pair each value leaf with its (possibly tuple-valued) axes entry.
+
+    Axes entries are tuples of strings which jax would otherwise traverse as
+    sub-pytrees; flatten_up_to stops at the value tree's leaf positions.
+    """
+    vals, treedef = jax.tree.flatten(value_tree)
+    axes = treedef.flatten_up_to(axes_tree)
+    return vals, axes, treedef
+
+
+def tree_shardings(mesh: Mesh, value_tree: PyTree, axes_tree: PyTree, rules=None):
+    """Build a NamedSharding pytree from values + logical axes."""
+    vals, axes, treedef = _zip_axes(value_tree, axes_tree)
+    out = [
+        NamedSharding(mesh, P()) if a is None else shard_like(mesh, a, v.shape, rules)
+        for v, a in zip(vals, axes)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def specs_tree(mesh: Mesh, value_tree: PyTree, axes_tree: PyTree, rules=None):
+    """Like tree_shardings but returns PartitionSpecs (for shard_map)."""
+    vals, axes, treedef = _zip_axes(value_tree, axes_tree)
+    out = [
+        P() if a is None else logical_to_spec(mesh, a, v.shape, rules)
+        for v, a in zip(vals, axes)
+    ]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,126 @@
+"""Pytree utilities used across the framework.
+
+Everything here is pure-python / pure-jax; no device state is touched at
+import time (a hard requirement for the dry-run launcher, which must set
+XLA_FLAGS before jax initializes devices).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of elements (parameters) in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_norm(tree: PyTree) -> jax.Array:
+    """Global l2 norm over all leaves."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_allclose(a: PyTree, b: PyTree, rtol=1e-5, atol=1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def flatten_dict(d: Mapping, parent: str = "", sep: str = "/") -> dict:
+    """Flatten a nested dict of arrays into {'a/b/c': leaf}."""
+    out = {}
+    for k, v in d.items():
+        key = f"{parent}{sep}{k}" if parent else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_dict(v, key, sep))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(d: Mapping, sep: str = "/") -> dict:
+    """Inverse of flatten_dict."""
+    out: dict = {}
+    for k, v in d.items():
+        parts = k.split(sep)
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """Map over leaves with a '/'-joined string path argument."""
+
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def partition(tree: PyTree, predicate: Callable[[str, Any], bool]):
+    """Split a (nested-dict) pytree into (true_subtree, false_subtree).
+
+    Leaves for which the predicate fails are replaced by None in the first
+    output and vice-versa; `merge` recombines them. This is the substrate for
+    the MTSL client/server parameter split.
+    """
+
+    def _sel(keep: bool):
+        return tree_map_with_path(
+            lambda p, x: x if predicate(p, x) == keep else None, tree
+        )
+
+    return _sel(True), _sel(False)
+
+
+def merge(a: PyTree, b: PyTree) -> PyTree:
+    """Merge two partitioned pytrees (None marks holes)."""
+    return jax.tree.map(
+        lambda x, y: x if x is not None else y, a, b,
+        is_leaf=lambda x: x is None,
+    )

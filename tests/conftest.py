@@ -1,0 +1,30 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device (the 512-device emulation is exclusive
+to launch/dryrun.py, which tests spawn as a subprocess)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def nprng():
+    return np.random.default_rng(0)
+
+
+ASSIGNED_ARCHS = [
+    "gemma3-12b",
+    "llama-3.2-vision-11b",
+    "deepseek-7b",
+    "mamba2-130m",
+    "deepseek-moe-16b",
+    "qwen3-moe-30b-a3b",
+    "whisper-tiny",
+    "mistral-large-123b",
+    "zamba2-7b",
+    "mistral-nemo-12b",
+]

@@ -1,0 +1,149 @@
+"""Core MTSL semantics: sync-policy invariants, per-component LR, the
+add-a-new-client freeze, microbatch equivalence, FedEM machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import federation, lr_policy
+from repro.core.mtsl import TrainState, build_train_step, init_state
+from repro.core.split import client_freeze_lr
+from repro.models import build_model
+from repro.optim import sgd
+from repro.optim.per_component import ComponentLR
+from repro.utils.sharding import strip
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    opt = sgd(0.05)
+    return cfg, model, M, opt
+
+
+def _batch(cfg, M, b=4, seed=0):
+    rng = np.random.default_rng(seed)
+    img = rng.normal(size=(M, b, cfg.image_size, cfg.image_size)).astype(np.float32)
+    lab = rng.integers(0, cfg.num_classes, size=(M, b))
+    img += lab[..., None, None] * 0.4
+    return {"image": jnp.asarray(img), "label": jnp.asarray(lab, jnp.int32)}
+
+
+def _fresh_state(model, opt, M, alg, seed=0):
+    params = strip(init_state(model, opt, jax.random.PRNGKey(seed), M, alg))
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def test_mtsl_towers_diverge(setup):
+    """MTSL towers are private: with heterogeneous data they must differ."""
+    cfg, model, M, opt = setup
+    state = _fresh_state(model, opt, M, "mtsl")
+    step = jax.jit(build_train_step(model, opt, M, "mtsl"))
+    for i in range(5):
+        state, _ = step(state, _batch(cfg, M, seed=i))
+    w = jax.tree.leaves(state.params["towers"])[0]
+    assert float(jnp.abs(w - w[0:1]).max()) > 1e-6
+
+
+@pytest.mark.parametrize("alg", ["splitfed", "fedavg"])
+def test_federated_towers_stay_identical(setup, alg):
+    """The federation invariant: all clients' towers remain bit-identical."""
+    cfg, model, M, opt = setup
+    state = _fresh_state(model, opt, M, alg)
+    step = jax.jit(build_train_step(model, opt, M, alg))
+    for i in range(5):
+        state, _ = step(state, _batch(cfg, M, seed=i))
+    for w in jax.tree.leaves(state.params["towers"]):
+        assert float(jnp.abs(w - w[0:1]).max()) == 0.0
+
+
+def test_component_lr_scales_updates(setup):
+    """Per-component LR (Alg. 1): client m's update scales with eta_m."""
+    cfg, model, M, opt = setup
+    state = _fresh_state(model, opt, M, "mtsl")
+    step = jax.jit(build_train_step(model, opt, M, "mtsl"))
+    batch = _batch(cfg, M)
+
+    ones = lr_policy.uniform(M)
+    double0 = ComponentLR(
+        server=jnp.asarray(1.0), clients=jnp.ones((M,)).at[0].set(2.0)
+    )
+    s1, _ = step(state, batch, ones)
+    s2, _ = step(state, batch, double0)
+    for a, b, p in zip(
+        jax.tree.leaves(s1.params["towers"]),
+        jax.tree.leaves(s2.params["towers"]),
+        jax.tree.leaves(state.params["towers"]),
+    ):
+        upd1 = np.asarray(a - p)
+        upd2 = np.asarray(b - p)
+        np.testing.assert_allclose(upd2[0], 2.0 * upd1[0], rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(upd2[1:], upd1[1:], rtol=1e-4, atol=1e-6)
+
+
+def test_add_new_client_freeze(setup):
+    """Paper Table 3 protocol: freezing everything but client j's tower
+    leaves the server and the other towers bit-identical."""
+    cfg, model, M, opt = setup
+    state = _fresh_state(model, opt, M, "mtsl")
+    step = jax.jit(build_train_step(model, opt, M, "mtsl"))
+    frozen = client_freeze_lr(M, active_client=1)
+    s1, _ = step(state, _batch(cfg, M), frozen)
+    for a, p in zip(jax.tree.leaves(s1.params["server"]), jax.tree.leaves(state.params["server"])):
+        assert float(jnp.abs(a - p).max()) == 0.0
+    for a, p in zip(jax.tree.leaves(s1.params["towers"]), jax.tree.leaves(state.params["towers"])):
+        diff = np.asarray(jnp.abs(a - p))
+        assert diff[1].max() > 0  # the new client trains
+        mask = np.ones(M, bool)
+        mask[1] = False
+        assert diff[mask].max() == 0.0  # everyone else frozen
+
+
+def test_microbatch_equivalence(setup):
+    cfg, model, M, opt = setup
+    state = _fresh_state(model, opt, M, "mtsl")
+    batch = _batch(cfg, M, b=8)
+    s1, _ = jax.jit(build_train_step(model, opt, M, "mtsl"))(state, batch)
+    s2, _ = jax.jit(build_train_step(model, opt, M, "mtsl", microbatches=4))(state, batch)
+    for a, b_ in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_fedavg_equals_splitfed_update_math(setup):
+    """With identical init, FedAvg and SplitFed produce the same parameters
+    up to the server LR scaling (DESIGN.md §2 table) — the difference is
+    *communication*, not math, for full-batch SGD."""
+    cfg, model, M, opt = setup
+    state = _fresh_state(model, opt, M, "fedavg")
+    batch = _batch(cfg, M)
+    sf, _ = jax.jit(build_train_step(model, opt, M, "splitfed"))(state, batch)
+    fa, _ = jax.jit(build_train_step(model, opt, M, "fedavg"))(state, batch)
+    # towers identical
+    for a, b_ in zip(jax.tree.leaves(sf.params["towers"]), jax.tree.leaves(fa.params["towers"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-7)
+    # fedavg server update = splitfed server update / M
+    for a, b_, p in zip(
+        jax.tree.leaves(sf.params["server"]),
+        jax.tree.leaves(fa.params["server"]),
+        jax.tree.leaves(state.params["server"]),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(b_ - p) * M, np.asarray(a - p), rtol=1e-4, atol=1e-7
+        )
+
+
+def test_fedem_step_and_eval(setup):
+    cfg, model, M, opt = setup
+    comps, pi = federation.init_fedem_state(model, jax.random.PRNGKey(0), M, 2)
+    comps = strip(comps)
+    state = federation.FedEMState(comps, pi, opt.init(comps), jnp.zeros((), jnp.int32))
+    step = jax.jit(federation.build_fedem_train_step(model, opt, M, 2))
+    for i in range(3):
+        state, metrics = step(state, _batch(cfg, M, seed=i))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    np.testing.assert_allclose(np.asarray(state.pi.sum(-1)), 1.0, atol=1e-5)
+    ev = jax.jit(federation.build_fedem_eval_step(model, M))(state, _batch(cfg, M))
+    assert 0.0 <= float(ev["acc_mtl"]) <= 1.0
