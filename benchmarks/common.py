@@ -1,17 +1,15 @@
 """Shared benchmark harness: train each algorithm on the paper's synthetic
 multi-task setup and evaluate Accuracy_MTL (Eq. 14).
 
-Round semantics (faithful to the compared papers):
-  mtsl:     every round = ONE split-learning step (smashed data crosses).
-  splitfed: every round = `local_steps` split steps against the central
-            server, then the client parts are fed-averaged.
-  fedavg:   every round = `local_steps` LOCAL full-model steps per client,
-            then full-model averaging (client drift happens here).
-  fedem:    synchronous EM mixture (no drift — a *strong* variant; if MTSL
-            still wins, the claim holds a fortiori).
+Every algorithm is driven through the unified Algorithm registry
+(repro/core/algorithms.py) — state init, round driver, eval adapter, and
+per-round byte accounting all come from the registration, so this file
+contains NO per-algorithm branches. Registering a new algorithm makes it
+benchmarkable here with zero changes (see examples/custom_algorithm.py).
 
-Progress is tracked in gradient steps (rounds x local_steps) and in
-transmitted bytes (core/comm_cost.py).
+Round semantics (faithful to the compared papers) are documented in
+core/algorithms.py. Progress is tracked in gradient steps
+(rounds x local_steps) and in transmitted bytes (core/comm_cost.py).
 """
 from __future__ import annotations
 
@@ -23,13 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import comm_cost, federation, lr_policy
-from repro.core.mtsl import TrainState, build_eval_step, build_train_step, init_state
-from repro.core.split import replicate_tower, stack_towers
+from repro.core.algorithms import HParams, get_algorithm
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
 from repro.models import build_model
-from repro.optim import sgd
 from repro.utils.sharding import strip
 
 ALGS = ["fedavg", "fedem", "splitfed", "mtsl"]
@@ -74,22 +69,6 @@ def _tower_total_params(model):
     return tower, total
 
 
-def _round_bytes(algorithm, cfg, M, b, k, tower_p, total_p):
-    if algorithm == "mtsl":
-        return comm_cost.round_cost("mtsl", cfg, M, b).total
-    if algorithm == "splitfed":
-        smashed = comm_cost.round_cost("mtsl", cfg, M, b).total * k
-        fed = comm_cost.round_cost("splitfed", cfg, M, b, tower_params=tower_p).total \
-            - comm_cost.round_cost("mtsl", cfg, M, b).total
-        return smashed + fed
-    if algorithm == "fedavg":
-        return comm_cost.round_cost("fedavg", cfg, M, b, total_params=total_p).total
-    if algorithm == "fedem":
-        return comm_cost.round_cost("fedem", cfg, M, b, total_params=total_p,
-                                    num_components=3).total
-    raise ValueError(algorithm)
-
-
 def run_algorithm(
     arch: str,
     algorithm: str,
@@ -117,93 +96,17 @@ def run_algorithm(
     rng0 = jax.random.PRNGKey(seed)
     t0 = time.time()
 
-    if algorithm == "mtsl":
-        opt = sgd(lr)
-        params = strip(init_state(model, opt, rng0, M, "mtsl"))
-        state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
-        step_fn = jax.jit(build_train_step(model, opt, M, "mtsl"))
-        clr = lr_policy.server_scaled(M, server_scale=2.0 / M)
-        ev = jax.jit(build_eval_step(model, M))
+    alg = get_algorithm(algorithm)
+    hp = HParams(lr=lr, local_steps=local_steps)
+    spr = alg.steps_per_round(hp)
+    rounds = max(steps // spr, 1)
+    per_round_batch = batch_per_client * spr
 
-        def do_round(state, batch):
-            return step_fn(state, batch, clr)
-
-        def do_eval(state):
-            return float(ev(state.params, tb)["acc_mtl"])
-
-        rounds = steps
-        steps_per_round = 1
-        per_round_batch = batch_per_client
-    elif algorithm == "splitfed":
-        params = strip({
-            "towers": replicate_tower(model.init_tower, rng0, M),
-            "server": model.init_server(jax.random.fold_in(rng0, 1)),
-        })
-        state = params
-        round_fn = jax.jit(federation.build_splitfed_round(model, lr, M, local_steps))
-        ev = jax.jit(build_eval_step(model, M))
-
-        def do_round(state, batch):
-            b = batch_per_client
-            batch = jax.tree.map(
-                lambda x: x.reshape((M, local_steps, b) + x.shape[2:]), batch)
-            return round_fn(state, batch)
-
-        def do_eval(state):
-            return float(ev(state, tb)["acc_mtl"])
-
-        rounds = max(steps // local_steps, 1)
-        steps_per_round = local_steps
-        per_round_batch = batch_per_client * local_steps
-    elif algorithm == "fedavg":
-        params = strip(federation.init_fedavg_params(model, rng0, M))
-        state = params
-        round_fn = jax.jit(federation.build_fedavg_round(model, lr, M, local_steps))
-        ev = jax.jit(federation.eval_fedavg(model, M))
-
-        def do_round(state, batch):
-            b = batch_per_client
-            batch = jax.tree.map(
-                lambda x: x.reshape((M, local_steps, b) + x.shape[2:]), batch)
-            return round_fn(state, batch)
-
-        def do_eval(state):
-            return float(ev(state, tb)["acc_mtl"])
-
-        rounds = max(steps // local_steps, 1)
-        steps_per_round = local_steps
-        per_round_batch = batch_per_client * local_steps
-    elif algorithm == "fedem":
-        comps, pi = federation.init_fedem_state(model, rng0, M, 3)
-        comps = strip(comps)
-        # round-based FedEM uses {"tower","server"} component layout
-        comps = {"tower": comps["tower"], "server": comps["server"]}
-        state = (comps, pi)
-        round_fn = jax.jit(federation.build_fedem_round(model, lr, M, 3, local_steps))
-        opt = sgd(lr)
-        ev = jax.jit(federation.build_fedem_eval_step(model, M))
-
-        def do_round(state, batch):
-            comps, pi = state
-            b = batch_per_client
-            batch = jax.tree.map(
-                lambda x: x.reshape((M, local_steps, b) + x.shape[2:]), batch)
-            comps, pi, metrics = round_fn(comps, pi, batch)
-            return (comps, pi), metrics
-
-        def do_eval(state):
-            comps, pi = state
-            st = federation.FedEMState(comps, pi, (), jnp.zeros((), jnp.int32))
-            return float(ev(st, tb)["acc_mtl"])
-
-        rounds = max(steps // local_steps, 1)
-        steps_per_round = local_steps
-        per_round_batch = batch_per_client * local_steps
-    else:
-        raise ValueError(algorithm)
-
-    per_round = _round_bytes(algorithm, cfg, M, batch_per_client, local_steps,
-                             tower_p, total_p)
+    state = alg.init_state(model, rng0, M, hp)
+    round_fn = jax.jit(alg.round_fn(model, M, hp))
+    eval_fn = jax.jit(alg.eval_fn(model, M))
+    per_round = alg.round_bytes(cfg, M, batch_per_client, hp,
+                                tower_params=tower_p, total_params=total_p)
 
     acc_curve, loss_curve = [], []
     steps_to = {a: None for a in acc_thresholds}
@@ -211,11 +114,11 @@ def run_algorithm(
     for i, batch in enumerate(
         client_batches(src, per_round_batch, steps=rounds, seed=seed)
     ):
-        state, metrics = do_round(state, batch)
+        state, metrics = round_fn(state, batch)
         loss_curve.append(float(metrics["loss"]))
         if (i + 1) % eval_every == 0 or i == rounds - 1:
-            acc = do_eval(state)
-            gsteps = (i + 1) * steps_per_round
+            acc = float(eval_fn(state, tb)["acc_mtl"])
+            gsteps = (i + 1) * spr
             acc_curve.append((gsteps, acc))
             for a in acc_thresholds:
                 if steps_to[a] is None and acc >= a:

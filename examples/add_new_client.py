@@ -5,10 +5,14 @@ the federation, a capability FL does not have.
 
     PYTHONPATH=src python examples/add_new_client.py
 """
+import pathlib
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks.common import make_source, test_batches
 from repro.configs import get_config
 from repro.core import lr_policy

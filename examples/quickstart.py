@@ -2,8 +2,12 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import pathlib
+import sys
+
 import jax
 
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks.common import run_algorithm
 
 if __name__ == "__main__":

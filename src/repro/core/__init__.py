@@ -7,3 +7,10 @@ from repro.core.mtsl import (
     init_state,
 )
 from repro.core import comm_cost, federation, lr_policy, split, theory
+from repro.core.algorithms import (
+    Algorithm,
+    HParams,
+    get_algorithm,
+    list_algorithms,
+    register_algorithm,
+)

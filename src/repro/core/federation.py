@@ -69,7 +69,11 @@ def sync_transform(algorithm: str, num_clients: int) -> Callable[[PyTree], PyTre
 # ---------------------------------------------------------------------------
 
 
-def _full_model_loss(model: Model):
+def full_model_loss(model: Model):
+    """Per-client full-model loss (tower∘server composition, no client axis).
+
+    Shared by the round-based FL baselines; also handy for custom
+    algorithms registered via core/algorithms.py."""
     cfg = model.cfg
     is_classifier = cfg.family in ("mlp", "resnet")
 
@@ -100,7 +104,7 @@ def build_fedavg_round(model: Model, lr: float, num_clients: int,
     params: {"towers": [M, ...], "servers": [M, ...]} (kept identical across
     clients between rounds). batch: [M, local_steps, b, ...].
     """
-    loss_fn = _full_model_loss(model)
+    loss_fn = full_model_loss(model)
 
     def round_fn(params, batch):
         def client_run(tp, sp, client_batch):
@@ -194,7 +198,7 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
     state: (components [K,...] of {"tower","server"}, pi [M,K]).
     batch: [M, local_steps, b, ...].
     """
-    loss_fn = _full_model_loss(model)
+    loss_fn = full_model_loss(model)
     K = num_components
 
     def per_sample_losses(comps, mb):

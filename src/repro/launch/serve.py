@@ -22,6 +22,23 @@ from repro.train.checkpoint import load_checkpoint
 from repro.utils.sharding import strip
 
 
+def _load_serve_params(path: str):
+    """{"towers","server"} params from either checkpoint format: an
+    Algorithm-registry state (train/loop.py) or a raw {"params": ...} tree
+    (examples/train_mtsl_lm.py)."""
+    tree = load_checkpoint(path)
+    if isinstance(tree, dict) and "algorithm" in tree and "state" in tree:
+        from repro.core.algorithms import get_algorithm
+
+        alg = get_algorithm(tree["algorithm"])
+        if alg.serve_params is None:
+            raise SystemExit(
+                f"algorithm {alg.name!r} states are not directly servable "
+                "(per-client servers / mixtures have no single split model)")
+        return alg.serve_params(alg.state_from_tree(tree["state"]))
+    return tree["params"]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
@@ -38,7 +55,7 @@ def main(argv=None):
     M, b = cfg.num_clients, args.batch_per_client
     rng = jax.random.PRNGKey(0)
     if args.checkpoint:
-        params = load_checkpoint(args.checkpoint)["params"]
+        params = _load_serve_params(args.checkpoint)
     else:
         params = strip({
             "towers": stack_towers(model.init_tower, rng, M),

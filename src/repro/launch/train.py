@@ -7,20 +7,21 @@ Two modes:
   * --mesh: run the same program pjit-sharded on the available devices
     (use XLA_FLAGS=--xla_force_host_platform_device_count=N to emulate).
 
+`--algorithm` accepts anything in the Algorithm registry
+(core/algorithms.py): mtsl, splitfed, fedavg, fedem, plus any algorithm
+registered by user code before invoking `main`.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --steps 100
-    PYTHONPATH=src python -m repro.launch.train --arch paper-mlp --algorithm fedavg
+    PYTHONPATH=src python -m repro.launch.train --arch paper-mlp --algorithm fedem
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs import get_config
 from repro.core import lr_policy
+from repro.core.algorithms import HParams, get_algorithm, list_algorithms
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
@@ -32,9 +33,11 @@ from repro.train.loop import TrainConfig, train
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-mlp")
-    ap.add_argument("--algorithm", default="mtsl",
-                    choices=["mtsl", "splitfed", "fedavg"])
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--algorithm", default="mtsl", choices=list_algorithms())
+    ap.add_argument("--steps", type=int, default=200,
+                    help="total gradient steps (rounds x local-steps)")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="local steps per round for round-based FL algorithms")
     ap.add_argument("--batch-per-client", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--alpha", type=float, default=0.0, help="heterogeneity")
@@ -47,10 +50,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke or args.arch.startswith("paper-") is False)
     # full paper-scale configs run on CPU; assigned archs use smoke variants
-    if args.arch.startswith("paper-"):
-        cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = get_config(args.arch,
+                     smoke=args.smoke or not args.arch.startswith("paper-"))
     model = build_model(cfg)
     M = cfg.num_clients
     is_classifier = cfg.family in ("mlp", "resnet")
@@ -58,24 +60,34 @@ def main(argv=None):
     opt_name = args.optimizer or ("sgd" if is_classifier else "adamw")
     opt = sgd(args.lr) if opt_name == "sgd" else adamw(args.lr)
 
+    alg = get_algorithm(args.algorithm)
+    if not alg.uses_optimizer and opt_name != "sgd":
+        print(f"note: {args.algorithm!r} runs the papers' plain local SGD at "
+              f"--lr; --optimizer {opt_name} is ignored")
+
+    spr = alg.steps_per_round(HParams(local_steps=args.local_steps))
+    rounds = max(args.steps // spr, 1)
+    per_round_batch = args.batch_per_client * spr
+
     if is_classifier:
         src = MultiTaskImageSource(
             num_classes=M, image_size=cfg.image_size,
             channels=cfg.image_channels, alpha=args.alpha,
             noise_sigma=args.noise_sigma, seed=args.seed,
         )
-        batches = client_batches(src, args.batch_per_client,
-                                 steps=args.steps, seed=args.seed)
+        batches = client_batches(src, per_round_batch,
+                                 steps=rounds, seed=args.seed)
     else:
         src = MultiTaskLMSource(vocab_size=cfg.vocab_size, num_clients=M,
                                 beta=1.0 - args.alpha, seed=args.seed)
-        batches = client_batches(src, args.batch_per_client,
-                                 seq_len=args.seq_len, steps=args.steps,
+        batches = client_batches(src, per_round_batch,
+                                 seq_len=args.seq_len, steps=rounds,
                                  seed=args.seed)
 
-    clr = lr_policy.server_scaled(M, args.server_lr_scale) \
-        if args.algorithm == "mtsl" else lr_policy.uniform(M)
+    # round-based algorithms ignore component_lr; mtsl applies it (Eq. 9)
+    clr = lr_policy.server_scaled(M, args.server_lr_scale)
     tcfg = TrainConfig(steps=args.steps, algorithm=args.algorithm,
+                       lr=args.lr, local_steps=args.local_steps,
                        checkpoint_path=args.checkpoint,
                        checkpoint_every=100 if args.checkpoint else 0,
                        seed=args.seed)

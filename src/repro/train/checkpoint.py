@@ -1,14 +1,18 @@
 """Checkpointing: msgpack-serialized pytrees (params / opt state / step).
 
 No orbax dependency; arrays are stored as (dtype, shape, raw bytes) and the
-tree structure as nested dicts/lists. Good enough for single-host training
-and the paper-scale experiments; sharded checkpointing for the production
-mesh would hook here (one file per shard, same format).
+tree structure as nested dicts/lists. NamedTuples (TrainState, AdamState,
+FedEMState, ...) round-trip by recording their import path, so ANY
+registered Algorithm's state checkpoints through the uniform
+`save_algorithm_state` / `load_algorithm_state` pair below. Good enough for
+single-host training and the paper-scale experiments; sharded checkpointing
+for the production mesh would hook here (one file per shard, same format).
 """
 from __future__ import annotations
 
+import importlib
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +22,7 @@ import numpy as np
 PyTree = Any
 
 _KIND = "__nd__"
+_NT = "__namedtuple__"
 
 
 def _pack(obj):
@@ -31,6 +36,11 @@ def _pack(obj):
         }
     if isinstance(obj, dict):
         return {str(k): _pack(v) for k, v in obj.items()}
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):
+        return {
+            _NT: f"{type(obj).__module__}:{type(obj).__qualname__}",
+            "__list__": [_pack(v) for v in obj],
+        }
     if isinstance(obj, (list, tuple)):
         return {"__list__": [_pack(v) for v in obj], "__tuple__": isinstance(obj, tuple)}
     if isinstance(obj, (int, float, str, bool)) or obj is None:
@@ -38,11 +48,26 @@ def _pack(obj):
     raise TypeError(f"cannot checkpoint {type(obj)}")
 
 
+def _resolve_namedtuple(spec: str):
+    mod, _, qual = spec.partition(":")
+    try:
+        cls = importlib.import_module(mod)
+        for part in qual.split("."):
+            cls = getattr(cls, part)
+        return cls
+    except (ImportError, AttributeError):
+        return None  # class moved/renamed: degrade to a plain tuple
+
+
 def _unpack(obj):
     if isinstance(obj, dict):
         if obj.get(_KIND):
             a = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
             return jnp.asarray(a.reshape(obj["shape"]))
+        if _NT in obj:
+            seq = [_unpack(v) for v in obj["__list__"]]
+            cls = _resolve_namedtuple(obj[_NT])
+            return cls(*seq) if cls is not None else tuple(seq)
         if "__list__" in obj:
             seq = [_unpack(v) for v in obj["__list__"]]
             return tuple(seq) if obj.get("__tuple__") else seq
@@ -61,3 +86,46 @@ def save_checkpoint(path: str, tree: PyTree) -> None:
 def load_checkpoint(path: str) -> PyTree:
     with open(path, "rb") as f:
         return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-state checkpoints (uniform across the Algorithm registry)
+# ---------------------------------------------------------------------------
+
+
+def save_algorithm_state(path: str, algorithm, state: PyTree,
+                         extra: Optional[dict] = None) -> None:
+    """Checkpoint any registered algorithm's opaque state.
+
+    `algorithm` is an Algorithm or a registry name. The file records the
+    algorithm name so `load_algorithm_state` can validate a mismatch.
+    """
+    from repro.core.algorithms import get_algorithm
+
+    alg = get_algorithm(algorithm) if isinstance(algorithm, str) else algorithm
+    tree = {"algorithm": alg.name, "state": alg.state_to_tree(state)}
+    if extra:
+        tree["extra"] = extra
+    save_checkpoint(path, tree)
+
+
+def load_algorithm_state(path: str, algorithm=None):
+    """Returns (state, algorithm_name[, extra]) -> (state, name, extra dict).
+
+    If `algorithm` (Algorithm or name) is given, it is checked against the
+    name recorded in the file and used for deserialization; otherwise the
+    recorded name is looked up in the registry.
+    """
+    from repro.core.algorithms import get_algorithm
+
+    tree = load_checkpoint(path)
+    name = tree.get("algorithm")
+    if algorithm is not None:
+        alg = get_algorithm(algorithm) if isinstance(algorithm, str) else algorithm
+        if name is not None and alg.name != name:
+            raise ValueError(
+                f"checkpoint {path!r} was written by algorithm {name!r}, "
+                f"not {alg.name!r}")
+    else:
+        alg = get_algorithm(name)
+    return alg.state_from_tree(tree["state"]), alg.name, tree.get("extra", {})

@@ -1,33 +1,39 @@
-"""Training loop: drives (data -> train_step -> metrics/eval/checkpoint)
-for any algorithm in {mtsl, splitfed, fedavg} (FedEM has its own loop in
-benchmarks — its state shape differs).
+"""Training loop: drives (data -> round_fn -> metrics/eval/checkpoint) for
+ANY algorithm in the registry (core/algorithms.py) — mtsl, splitfed, fedavg,
+fedem, and anything registered after them — with uniform history, eval, and
+checkpoint hooks.
+
+Each iteration consumes one ROUND batch `[M, steps_per_round * b, ...]`;
+`TrainConfig.steps` counts GRADIENT steps, so round-based FL algorithms run
+`steps // steps_per_round` rounds. History entries are keyed by gradient
+step for cross-algorithm comparability.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mtsl import TrainState, build_eval_step, build_train_step, init_state
+from repro.core.algorithms import HParams, get_algorithm
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.optim.per_component import ComponentLR
-from repro.train.checkpoint import save_checkpoint
-from repro.utils.sharding import strip
+from repro.train.checkpoint import save_algorithm_state
 
 
 @dataclass
 class TrainConfig:
-    steps: int = 200
+    steps: int = 200  # total gradient steps (rounds = steps / steps_per_round)
     algorithm: str = "mtsl"
-    log_every: int = 20
-    eval_every: int = 0
+    lr: float = 0.1  # used by round-based algorithms (mtsl uses `optimizer`)
+    local_steps: int = 1  # local steps per round for round-based FL
+    log_every: int = 20  # in rounds
+    eval_every: int = 0  # in rounds
     checkpoint_path: Optional[str] = None
-    checkpoint_every: int = 0
+    checkpoint_every: int = 0  # in rounds
     microbatches: int = 1
     seed: int = 0
 
@@ -42,33 +48,49 @@ def train(
     eval_batches=None,
     log: Callable[[str], None] = print,
 ):
-    """Returns (final_state, history list of metric dicts)."""
+    """Returns (final_state, history list of metric dicts).
+
+    `batches` must yield round batches `[M, steps_per_round * b, ...]`
+    (for single-step algorithms that is the ordinary per-step batch).
+    """
+    alg = get_algorithm(tcfg.algorithm)
+    hp = HParams(lr=tcfg.lr, local_steps=tcfg.local_steps,
+                 optimizer=optimizer, component_lr=component_lr,
+                 microbatches=tcfg.microbatches)
+    spr = alg.steps_per_round(hp)
+    rounds = max(tcfg.steps // spr, 1)
+
     rng = jax.random.PRNGKey(tcfg.seed)
-    params = strip(init_state(model, optimizer, rng, num_clients, tcfg.algorithm))
-    state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
-    step_fn = jax.jit(
-        build_train_step(model, optimizer, num_clients, tcfg.algorithm,
-                         microbatches=tcfg.microbatches)
-    )
-    eval_fn = jax.jit(build_eval_step(model, num_clients)) if eval_batches else None
+    state = alg.init_state(model, rng, num_clients, hp)
+    round_fn = jax.jit(alg.round_fn(model, num_clients, hp))
+    eval_fn = jax.jit(alg.eval_fn(model, num_clients)) if eval_batches else None
 
     history = []
     t0 = time.time()
+    rounds_done = ckpt_round = 0
     for i, batch in enumerate(batches):
-        if i >= tcfg.steps:
+        if i >= rounds:
             break
-        state, metrics = step_fn(state, batch, component_lr)
-        if (i + 1) % tcfg.log_every == 0 or i == 0:
+        state, metrics = round_fn(state, batch)
+        rounds_done = i + 1
+        if (i + 1) % tcfg.log_every == 0 or i == 0 or i == rounds - 1:
             m = {k: np.asarray(v) for k, v in metrics.items()}
-            entry = {"step": i + 1, "loss": float(m["loss"]),
-                     "time": time.time() - t0}
+            entry = {"step": (i + 1) * spr, "round": i + 1,
+                     "loss": float(m["loss"]), "time": time.time() - t0}
             if eval_fn is not None and tcfg.eval_every and (i + 1) % tcfg.eval_every == 0:
-                ev = eval_fn(state.params, next(iter(eval_batches)))
+                ev = eval_fn(state, next(iter(eval_batches)))
                 entry["acc_mtl"] = float(ev.get("acc_mtl", float("nan")))
             history.append(entry)
             log(f"step {entry['step']:>6d}  loss {entry['loss']:.4f}"
                 + (f"  acc_mtl {entry['acc_mtl']:.3f}" if "acc_mtl" in entry else "")
                 + f"  ({entry['time']:.1f}s)")
         if tcfg.checkpoint_path and tcfg.checkpoint_every and (i + 1) % tcfg.checkpoint_every == 0:
-            save_checkpoint(tcfg.checkpoint_path, {"params": state.params, "step": int(state.step)})
+            save_algorithm_state(tcfg.checkpoint_path, alg, state,
+                                 extra={"step": (i + 1) * spr})
+            ckpt_round = i + 1
+    if tcfg.checkpoint_path and rounds_done > ckpt_round:
+        # always leave a final checkpoint behind (unless the last round's
+        # periodic save already wrote this exact state)
+        save_algorithm_state(tcfg.checkpoint_path, alg, state,
+                             extra={"step": rounds_done * spr})
     return state, history
