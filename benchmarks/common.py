@@ -21,13 +21,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.algorithms import HParams, get_algorithm
+from repro.core.algorithms import HParams, get_algorithm, num_rounds
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
 from repro.models import build_model
 from repro.utils.sharding import strip
 
-ALGS = ["fedavg", "fedem", "splitfed", "mtsl"]
+ALGS = ["fedavg", "fedprox", "fedem", "splitfed", "smofi", "parallelsfl",
+        "mtsl"]
 LOCAL_STEPS = 100  # local epochs per round (FL drift regime, see EXPERIMENTS.md)
 
 
@@ -84,6 +85,7 @@ def run_algorithm(
     smoke: bool = False,
     local_steps: int = LOCAL_STEPS,
     cfg_overrides: dict | None = None,
+    hparams: dict | None = None,
 ) -> RunResult:
     cfg = get_config(arch, smoke=smoke)
     if cfg_overrides:
@@ -97,9 +99,9 @@ def run_algorithm(
     t0 = time.time()
 
     alg = get_algorithm(algorithm)
-    hp = HParams(lr=lr, local_steps=local_steps)
+    hp = HParams(lr=lr, local_steps=local_steps, **(hparams or {}))
     spr = alg.steps_per_round(hp)
-    rounds = max(steps // spr, 1)
+    rounds = num_rounds(steps, spr)
     per_round_batch = batch_per_client * spr
 
     state = alg.init_state(model, rng0, M, hp)

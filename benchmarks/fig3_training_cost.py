@@ -1,8 +1,11 @@
 """Paper Fig. 3: training cost — (a) steps and (b) transmitted bytes to
-reach given accuracy levels, per algorithm, at alpha=0.
+reach given accuracy levels, per algorithm, at alpha=0, over all seven
+registered baselines (fedavg, fedprox, fedem, splitfed, smofi,
+parallelsfl, mtsl — see benchmarks.common.ALGS).
 
 Expected: MTSL reaches each accuracy level in fewer steps AND fewer bytes
-(smashed-data traffic only, no federation traffic, faster convergence).
+(smashed-data traffic only, no federation traffic, faster convergence),
+including against the heterogeneity-aware baselines.
 """
 from __future__ import annotations
 

@@ -12,7 +12,9 @@ from benchmarks.common import run_algorithm
 def run(quick: bool = False):
     ls = 20 if quick else 100
     rows = []
-    algs = ["fedavg", "mtsl"] if quick else ["fedavg", "splitfed", "mtsl"]
+    algs = (["fedavg", "mtsl"] if quick
+            else ["fedavg", "fedprox", "splitfed", "smofi", "parallelsfl",
+                  "mtsl"])
 
     # (a) heterogeneity sweep
     alphas = [0.0, 0.45] if quick else [0.0, 0.2, 0.45]

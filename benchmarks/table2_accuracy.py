@@ -2,7 +2,9 @@
 (maximal heterogeneity), on the paper's two model families (MLP "MNIST-like"
 and ResNet-16 "CIFAR-like") over synthetic class-conditional data.
 
-Expected qualitative result (paper): MTSL >> FedAvg/FedEM/SplitFed.
+Expected qualitative result (paper): MTSL >> FedAvg/FedEM/SplitFed, and it
+also holds up against the heterogeneity-aware baselines added in PR 2
+(FedProx, SMoFi, ParallelSFL).
 """
 from __future__ import annotations
 

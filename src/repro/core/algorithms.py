@@ -37,7 +37,24 @@ Round semantics of the built-ins (faithful to the compared papers):
             server, then the client parts are fed-averaged.
   fedavg:   every round = `local_steps` LOCAL full-model steps per client,
             then full-model averaging (client drift happens here).
+  fedprox:  fedavg whose local steps carry a proximal pull
+            (mu/2)·||p - p_round_start||² toward the round-start global
+            model [Li et al., 2020] — the classic drift-damping baseline.
   fedem:    synchronous EM mixture of K full models (a *strong* variant).
+  smofi:    splitfed with per-client server replicas whose heavy-ball
+            momentum buffers are FUSED (averaged) at every local step
+            [Yang et al., 2025]; towers fed-average at round end and the
+            fused momentum persists across rounds. Fusion keeps the
+            replicas bitwise identical, so the state stores the shared
+            server (and buffer) once.
+  parallelsfl: clients grouped into `num_clusters` balanced clusters, each
+            cluster split-federating against its own server replica;
+            towers fed-average within their cluster and the replicas merge
+            globally at round end [Liao et al., 2024].
+
+All round-based baselines run the papers' plain local SGD at `hp.lr`
+(smofi's server side adds heavy-ball momentum `hp.momentum`); only mtsl
+consumes `hp.optimizer`/`hp.component_lr`.
 """
 from __future__ import annotations
 
@@ -77,6 +94,9 @@ class HParams:
     component_lr: Optional[ComponentLR] = None  # default: paper's server-scaled
     microbatches: int = 1
     num_components: int = 3  # FedEM mixture size
+    prox_mu: float = 0.01  # FedProx proximal strength
+    momentum: float = 0.9  # SMoFi server-side heavy-ball coefficient
+    num_clusters: int = 2  # ParallelSFL cluster count (clamped to [1, M])
 
     def with_updates(self, **kw) -> "HParams":
         return replace(self, **kw)
@@ -127,6 +147,13 @@ def split_local_steps(batch: PyTree, local_steps: int) -> PyTree:
     return jax.tree.map(
         lambda x: x.reshape((x.shape[0], local_steps, -1) + x.shape[2:]), batch
     )
+
+
+def num_rounds(total_steps: int, steps_per_round: int) -> int:
+    """Rounds needed to cover `total_steps` gradient steps: CEIL division,
+    so a requested step budget is never silently truncated when it is not a
+    multiple of the round size (the final partial round trains in full)."""
+    return max(-(-total_steps // steps_per_round), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -361,4 +388,133 @@ register_algorithm(Algorithm(
     state_from_tree=lambda tree: (tree["components"], tree["pi"]),
     description="FedEM [Marfoq et al. 2021]: mixture of K shared full models "
                 "with per-client responsibilities.",
+))
+
+
+# ---------------------------------------------------------------------------
+# fedprox — fedavg with a proximal pull toward the round-start global model
+# ---------------------------------------------------------------------------
+
+
+def _fedprox_round(model, num_clients, hp: HParams):
+    rf = federation.build_fedprox_round(model, hp.lr, num_clients,
+                                        hp.local_steps, hp.prox_mu)
+
+    def round_fn(state, batch):
+        return rf(state, split_local_steps(batch, hp.local_steps))
+
+    return round_fn
+
+
+def _fedprox_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
+                   total_params=None):
+    return comm_cost.round_cost(
+        "fedprox", cfg, num_clients, batch_per_client,
+        total_params=total_params).total
+
+
+register_algorithm(Algorithm(
+    name="fedprox",
+    init_state=_fedavg_init,  # same replicated full-model layout as fedavg
+    round_fn=_fedprox_round,
+    eval_fn=federation.eval_fedavg,
+    round_bytes=_fedprox_bytes,
+    description="FedProx [Li et al. 2020]: FedAvg whose local steps add "
+                "(mu/2)·||p - p_global||² drift damping (hp.prox_mu).",
+))
+
+
+# ---------------------------------------------------------------------------
+# parallelsfl — cluster-wise split federation with per-cluster server replicas
+# ---------------------------------------------------------------------------
+
+
+def _parallelsfl_init(model, rng, num_clients, hp: HParams):
+    _, C = federation.cluster_assignment(num_clients, hp.num_clusters)
+    return strip({
+        "towers": replicate_tower(model.init_tower, rng, num_clients),
+        "servers": replicate_tower(model.init_server,
+                                   jax.random.fold_in(rng, 1), C),
+    })
+
+
+def _parallelsfl_round(model, num_clients, hp: HParams):
+    rf = federation.build_parallelsfl_round(model, hp.lr, num_clients,
+                                            hp.local_steps, hp.num_clusters)
+
+    def round_fn(state, batch):
+        return rf(state, split_local_steps(batch, hp.local_steps))
+
+    return round_fn
+
+
+def _parallelsfl_bytes(cfg, num_clients, batch_per_client, hp, *,
+                       tower_params=None, total_params=None):
+    server_params = None
+    if tower_params is not None and total_params is not None:
+        server_params = total_params - tower_params
+    return comm_cost.round_cost(
+        "parallelsfl", cfg, num_clients, batch_per_client,
+        tower_params=tower_params, server_params=server_params,
+        local_steps=hp.local_steps, num_clusters=hp.num_clusters).total
+
+
+register_algorithm(Algorithm(
+    name="parallelsfl",
+    init_state=_parallelsfl_init,
+    round_fn=_parallelsfl_round,
+    eval_fn=federation.eval_parallelsfl,
+    round_bytes=_parallelsfl_bytes,
+    description="ParallelSFL [Liao et al. 2024]: cluster-wise split "
+                "federation — towers fed-average within their cluster, "
+                "per-cluster server replicas merge each round "
+                "(hp.num_clusters).",
+))
+
+
+# ---------------------------------------------------------------------------
+# smofi — splitfed with step-wise server-side momentum fusion
+# ---------------------------------------------------------------------------
+
+
+def _smofi_init(model, rng, num_clients, hp: HParams):
+    # one shared server + fused momentum buffer: the per-client replicas of
+    # the SMoFi paper never diverge under step-wise fusion (see
+    # federation.build_smofi_round), so they are stored once
+    server = strip(model.init_server(jax.random.fold_in(rng, 1)))
+    return {
+        "towers": strip(replicate_tower(model.init_tower, rng, num_clients)),
+        "server": server,
+        "smom": jax.tree.map(jnp.zeros_like, server),
+    }
+
+
+def _smofi_round(model, num_clients, hp: HParams):
+    rf = federation.build_smofi_round(model, hp.lr, num_clients,
+                                      hp.local_steps, hp.momentum)
+
+    def round_fn(state, batch):
+        return rf(state, split_local_steps(batch, hp.local_steps))
+
+    return round_fn
+
+
+def _smofi_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
+                 total_params=None):
+    return comm_cost.round_cost(
+        "smofi", cfg, num_clients, batch_per_client,
+        tower_params=tower_params, local_steps=hp.local_steps).total
+
+
+register_algorithm(Algorithm(
+    name="smofi",
+    init_state=_smofi_init,
+    round_fn=_smofi_round,
+    eval_fn=_shared_state_eval,  # reads {"towers","server"}, like splitfed
+    round_bytes=_smofi_bytes,
+    serve_params=lambda state: {"towers": state["towers"],
+                                "server": state["server"]},
+    description="SMoFi [Yang et al. 2025]: splitfed whose per-client server "
+                "replicas fuse their momentum buffers at every local step "
+                "(hp.momentum).",
 ))

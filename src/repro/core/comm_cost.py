@@ -6,10 +6,24 @@ The paper counts bytes crossing the client<->server links per round:
            down: M·(b·|s|)                  (activation gradients)
   SplitFed MTSL traffic + tower federation: M·(|psi| up + |psi| down)
   FedAvg   M·(|theta| up + |theta| down)    (full-model grads/params)
+  FedProx  same as FedAvg (the proximal term is computed locally)
   FedEM    K·M·(|theta| up + |theta| down)  (K components)
+  SMoFi    k local split steps' smashed traffic + tower federation; the
+           step-wise momentum fusion happens BETWEEN server replicas that
+           all live on the ONE central server, so it crosses no network
+           link and is free here
+  ParallelSFL  k local split steps' smashed traffic + within-cluster tower
+           federation (M·|psi| each way) + the per-cluster server-replica
+           merge (C·|theta_s| each way). Unlike SMoFi's co-located
+           replicas, ParallelSFL's C cluster servers are DISTINCT edge
+           entities (one per cluster), so merging them is real network
+           traffic and is counted
 
-|s| = d_model elements per token/sample at the split boundary. On the TPU
-mesh the same quantities appear as HLO collectives (measured by the roofline
+|s| = d_model elements per token/sample at the split boundary. The model
+counts every byte that crosses a network link in each algorithm's
+deployment topology (client<->server links, plus the inter-server backbone
+where an algorithm has more than one server entity). On the TPU mesh the
+same quantities appear as HLO collectives (measured by the roofline
 harness); this module is the paper-faithful *edge* model.
 """
 from __future__ import annotations
@@ -34,8 +48,13 @@ def _smashed_elems(cfg: ModelConfig, batch_per_client: int, seq_len: int = 1) ->
     if cfg.family == "mlp":
         return batch_per_client * cfg.mlp_dims[cfg.split_layers]
     if cfg.family == "resnet":
-        # spatial map after `split_layers` stages (stride 2 between stages)
-        hw = cfg.image_size // (2 ** max(cfg.split_layers - 1, 0))
+        # spatial map after the stem (stride 1) and `split_layers` stages:
+        # stage 0 keeps resolution, each later stage opens with a stride-2
+        # SAME conv, i.e. CEIL division per stage (verified against real
+        # tower_forward shapes in tests/test_comm_cost.py)
+        hw = cfg.image_size
+        for _ in range(max(cfg.split_layers - 1, 0)):
+            hw = -(-hw // 2)
         c = cfg.resnet_stages[cfg.split_layers - 1][0]
         return batch_per_client * hw * hw * c
     if cfg.family == "encdec":
@@ -58,8 +77,16 @@ def round_cost(
     bytes_per_elem: int = 4,
     label_bytes: int = 4,
     num_components: int = 3,
+    local_steps: int = 1,
+    server_params: int | None = None,
+    num_clusters: int = 2,
 ) -> RoundCost:
-    """Bytes per training round for one of {mtsl, splitfed, fedavg, fedem}."""
+    """Bytes per training round for one of {mtsl, splitfed, fedavg, fedprox,
+    fedem, smofi, parallelsfl}.
+
+    mtsl/splitfed/fedavg/fedem keep their original one-exchange semantics
+    (callers compose local steps themselves); the smofi/parallelsfl branches
+    take `local_steps` and return the full round."""
     M = num_clients
     s = _smashed_elems(cfg, batch_per_client, seq_len) * bytes_per_elem
     labels = batch_per_client * max(seq_len, 1) * label_bytes
@@ -69,7 +96,7 @@ def round_cost(
         assert tower_params is not None
         fed = M * tower_params * bytes_per_elem
         return RoundCost(up_bytes=M * (s + labels) + fed, down_bytes=M * s + fed)
-    if algorithm == "fedavg":
+    if algorithm in ("fedavg", "fedprox"):
         assert total_params is not None
         fed = M * total_params * bytes_per_elem
         return RoundCost(up_bytes=fed, down_bytes=fed)
@@ -77,4 +104,19 @@ def round_cost(
         assert total_params is not None
         fed = num_components * M * total_params * bytes_per_elem
         return RoundCost(up_bytes=fed, down_bytes=fed)
+    if algorithm == "smofi":
+        # k split steps against per-client server replicas (all server-side,
+        # so momentum fusion is free on the edge) + one tower federation
+        assert tower_params is not None
+        fed = M * tower_params * bytes_per_elem
+        return RoundCost(up_bytes=local_steps * M * (s + labels) + fed,
+                         down_bytes=local_steps * M * s + fed)
+    if algorithm == "parallelsfl":
+        # k split steps + within-cluster tower federation + merging the C
+        # cluster server replicas across the backbone
+        assert tower_params is not None and server_params is not None
+        C = max(1, min(num_clusters, M))
+        fed = M * tower_params * bytes_per_elem + C * server_params * bytes_per_elem
+        return RoundCost(up_bytes=local_steps * M * (s + labels) + fed,
+                         down_bytes=local_steps * M * s + fed)
     raise ValueError(algorithm)

@@ -15,6 +15,14 @@ roofline harness.
 
 FedEM [Marfoq et al., 2021] learns a mixture of K full models with
 per-client mixture weights; it has its own state/step builders.
+
+Round-based heterogeneity-aware baselines (PR 2) also live here:
+  build_fedprox_round     FedProx [Li et al., 2020] — proximal local steps
+                          (mu=0 recovers build_fedavg_round exactly).
+  build_parallelsfl_round ParallelSFL [Liao et al., 2024] — cluster-wise
+                          split federation with per-cluster server replicas.
+  build_smofi_round       SMoFi [Yang et al., 2025] — splitfed with
+                          step-wise server-side momentum fusion.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -96,10 +105,17 @@ def full_model_loss(model: Model):
     return loss_fn
 
 
-def build_fedavg_round(model: Model, lr: float, num_clients: int,
-                       local_steps: int) -> Callable:
-    """One FedAvg ROUND: every client runs `local_steps` SGD steps on its own
-    data from the shared model, then all full-model params are averaged.
+def build_fedprox_round(model: Model, lr: float, num_clients: int,
+                        local_steps: int, mu: float = 0.0) -> Callable:
+    """One FedProx ROUND [Li et al., 2020]: every client runs `local_steps`
+    SGD steps on its own data, each step minimizing
+
+        loss(p) + (mu/2)·||p - p_round_start||²
+
+    (the proximal term anchors local models to the round-start global model,
+    damping client drift under heterogeneity), then all full-model params are
+    averaged. `mu=0` recovers FedAvg exactly — the proximal branch is not
+    traced at all, so `build_fedavg_round` delegates here.
 
     params: {"towers": [M, ...], "servers": [M, ...]} (kept identical across
     clients between rounds). batch: [M, local_steps, b, ...].
@@ -108,13 +124,18 @@ def build_fedavg_round(model: Model, lr: float, num_clients: int,
 
     def round_fn(params, batch):
         def client_run(tp, sp, client_batch):
+            anchor = {"tower": tp, "server": sp}
+
             def one_step(carry, mb):
                 pc = carry
                 loss, grads = jax.value_and_grad(lambda p: loss_fn(p, mb))(pc)
+                if mu:
+                    grads = jax.tree.map(
+                        lambda g, p, a: g + mu * (p - a).astype(g.dtype),
+                        grads, pc, anchor)
                 pc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), pc, grads)
                 return pc, loss
-            pc, losses = jax.lax.scan(
-                one_step, {"tower": tp, "server": sp}, client_batch)
+            pc, losses = jax.lax.scan(one_step, anchor, client_batch)
             return pc, jnp.mean(losses)
 
         pcs, losses = jax.vmap(client_run)(
@@ -126,6 +147,14 @@ def build_fedavg_round(model: Model, lr: float, num_clients: int,
         return new, {"loss": jnp.sum(losses), "per_task": losses}
 
     return round_fn
+
+
+def build_fedavg_round(model: Model, lr: float, num_clients: int,
+                       local_steps: int) -> Callable:
+    """One FedAvg ROUND: every client runs `local_steps` SGD steps on its own
+    data from the shared model, then all full-model params are averaged.
+    FedProx with mu=0 (identical trace — see build_fedprox_round)."""
+    return build_fedprox_round(model, lr, num_clients, local_steps, mu=0.0)
 
 
 def build_splitfed_round(model: Model, lr: float, num_clients: int,
@@ -153,6 +182,153 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
             lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape),
             p["towers"])
         new = {"towers": towers, "server": p["server"]}
+        return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
+
+    return round_fn
+
+
+def cluster_assignment(num_clients: int, num_clusters: int):
+    """Static round-robin client->cluster map: (cidx [M], C).
+
+    `num_clusters` is clamped to [1, M]; round-robin assignment keeps the
+    clusters balanced (sizes differ by at most one) without requiring
+    M % C == 0."""
+    C = max(1, min(num_clusters, num_clients))
+    return np.arange(num_clients) % C, C
+
+
+def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
+                            local_steps: int, num_clusters: int) -> Callable:
+    """One ParallelSFL ROUND [Liao et al., 2024]: clients are partitioned
+    into C balanced clusters, each cluster running split federation against
+    its OWN server replica. For `local_steps` steps every client takes a
+    split step (tower: local SGD; cluster server replica: one step on the
+    mean of its members' server gradients — the within-cluster implicit
+    aggregation). At round end the towers are fed-averaged WITHIN each
+    cluster and the C server replicas are merged globally.
+
+    params: {"towers": [M, ...], "servers": [C, ...]}.
+    batch: [M, local_steps, b, ...].
+    """
+    loss_fn = full_model_loss(model)
+    cidx_np, C = cluster_assignment(num_clients, num_clusters)
+    cidx = jnp.asarray(cidx_np)
+    counts = jnp.asarray(np.bincount(cidx_np, minlength=C), jnp.float32)
+
+    def _cluster_mean(x):
+        """[M, ...] per-client values -> [C, ...] per-cluster means."""
+        return jax.ops.segment_sum(x, cidx, num_segments=C) \
+            / counts.reshape((C,) + (1,) * (x.ndim - 1))
+
+    def round_fn(params, batch):
+        mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
+
+        def one_step(carry, mb):
+            towers, servers = carry
+            servers_pc = jax.tree.map(lambda s: s[cidx], servers)  # [M, ...]
+
+            def client_grad(tp, sp, mbm):
+                return jax.value_and_grad(
+                    lambda p: loss_fn(p, mbm))({"tower": tp, "server": sp})
+
+            losses, grads = jax.vmap(client_grad)(towers, servers_pc, mb)
+            towers = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  towers, grads["tower"])
+            servers = jax.tree.map(
+                lambda p, g: p - lr * _cluster_mean(g).astype(p.dtype),
+                servers, grads["server"])
+            return (towers, servers), losses
+
+        (towers, servers), per = jax.lax.scan(
+            one_step, (params["towers"], params["servers"]), mbs)
+        # end of round: fed-average towers within each cluster, merge replicas
+        towers = jax.tree.map(lambda x: _cluster_mean(x)[cidx], towers)
+        servers = jax.tree.map(
+            lambda s: jnp.broadcast_to(jnp.mean(s, 0, keepdims=True), s.shape),
+            servers)
+        new = {"towers": towers, "servers": servers}
+        return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
+
+    return round_fn
+
+
+def eval_parallelsfl(model: Model, num_clients: int):
+    """Eval {"towers": [M,...], "servers": [C,...]} states: client m is
+    served by its cluster's server replica (C inferred from the state)."""
+    M = num_clients
+
+    def eval_fn(params, batch):
+        C = jax.tree.leaves(params["servers"])[0].shape[0]
+        cidx_np, _ = cluster_assignment(M, C)  # SAME map as the round builder
+        cidx = jnp.asarray(cidx_np)
+        servers_pc = jax.tree.map(lambda s: s[cidx], params["servers"])
+
+        def client_eval(tp, sp, inputs, labels):
+            smashed = model.tower_forward(tp, inputs)
+            logits, _ = model.server_forward(sp, smashed)
+            preds = jnp.argmax(logits.astype(jnp.float32), -1)
+            return jnp.mean((preds == labels).astype(jnp.float32))
+
+        inputs = {k: v for k, v in batch.items() if k != "label"}
+        accs = jax.vmap(client_eval)(params["towers"], servers_pc,
+                                     inputs, batch["label"])
+        return {"per_task_acc": accs, "acc_mtl": jnp.mean(accs)}
+
+    return eval_fn
+
+
+def build_smofi_round(model: Model, lr: float, num_clients: int,
+                      local_steps: int, momentum: float) -> Callable:
+    """One SMoFi ROUND [Yang et al., 2025]: splitfed with per-client server
+    replicas whose momentum buffers are FUSED at every local step. Each step
+    every client takes a split step; the server replicas accumulate
+    heavy-ball momentum (v_m <- beta·v_m + g_m) and the buffers are then
+    averaged across clients — the step-wise momentum fusion that keeps the
+    replicas moving in lockstep despite heterogeneous gradients. At round
+    end the towers are fed-averaged (SplitFedv1's Fed server), and the
+    fused momentum persists into the next round.
+
+    Because the replicas share one init and every step applies the SAME
+    fused update, they stay bitwise identical forever — so the state stores
+    the shared server and fused buffer ONCE (v <- beta·v + mean_m g_m, the
+    algebraically identical collapsed form) instead of M dead-weight
+    copies.
+
+    state: {"towers": [M,...], "server": ..., "smom": ...}.
+    batch: [M, local_steps, b, ...].
+    """
+    loss_fn = full_model_loss(model)
+
+    def _fedavg_bcast(x):
+        return jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
+
+    def round_fn(state, batch):
+        mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
+
+        def one_step(carry, mb):
+            towers, server, smom = carry
+
+            def client_grad(tp, sv, mbm):
+                return jax.value_and_grad(
+                    lambda p: loss_fn(p, mbm))({"tower": tp, "server": sv})
+
+            losses, grads = jax.vmap(client_grad, in_axes=(0, None, 0))(
+                towers, server, mb)
+            towers = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  towers, grads["tower"])
+            # step-wise momentum fusion: the shared buffer accumulates the
+            # clients' mean server gradient
+            smom = jax.tree.map(
+                lambda v, g: momentum * v + jnp.mean(g, 0).astype(v.dtype),
+                smom, grads["server"])
+            server = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
+                                  server, smom)
+            return (towers, server, smom), losses
+
+        (towers, server, smom), per = jax.lax.scan(
+            one_step, (state["towers"], state["server"], state["smom"]), mbs)
+        new = {"towers": jax.tree.map(_fedavg_bcast, towers),
+               "server": server, "smom": smom}
         return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
 
     return round_fn

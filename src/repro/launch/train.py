@@ -8,8 +8,9 @@ Two modes:
     (use XLA_FLAGS=--xla_force_host_platform_device_count=N to emulate).
 
 `--algorithm` accepts anything in the Algorithm registry
-(core/algorithms.py): mtsl, splitfed, fedavg, fedem, plus any algorithm
-registered by user code before invoking `main`.
+(core/algorithms.py): mtsl, splitfed, fedavg, fedprox, fedem, smofi,
+parallelsfl, plus any algorithm registered by user code before invoking
+`main`.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --steps 100
@@ -21,7 +22,12 @@ import argparse
 
 from repro.configs import get_config
 from repro.core import lr_policy
-from repro.core.algorithms import HParams, get_algorithm, list_algorithms
+from repro.core.algorithms import (
+    HParams,
+    get_algorithm,
+    list_algorithms,
+    num_rounds,
+)
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
@@ -38,6 +44,12 @@ def main(argv=None):
                     help="total gradient steps (rounds x local-steps)")
     ap.add_argument("--local-steps", type=int, default=1,
                     help="local steps per round for round-based FL algorithms")
+    ap.add_argument("--prox-mu", type=float, default=0.01,
+                    help="fedprox proximal strength")
+    ap.add_argument("--momentum", type=float, default=0.9,
+                    help="smofi server-side momentum coefficient")
+    ap.add_argument("--num-clusters", type=int, default=2,
+                    help="parallelsfl cluster count (clamped to [1, M])")
     ap.add_argument("--batch-per-client", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--alpha", type=float, default=0.0, help="heterogeneity")
@@ -66,7 +78,7 @@ def main(argv=None):
               f"--lr; --optimizer {opt_name} is ignored")
 
     spr = alg.steps_per_round(HParams(local_steps=args.local_steps))
-    rounds = max(args.steps // spr, 1)
+    rounds = num_rounds(args.steps, spr)
     per_round_batch = args.batch_per_client * spr
 
     if is_classifier:
@@ -90,7 +102,9 @@ def main(argv=None):
                        lr=args.lr, local_steps=args.local_steps,
                        checkpoint_path=args.checkpoint,
                        checkpoint_every=100 if args.checkpoint else 0,
-                       seed=args.seed)
+                       seed=args.seed, prox_mu=args.prox_mu,
+                       momentum=args.momentum,
+                       num_clusters=args.num_clusters)
     state, history = train(model, opt, batches, tcfg, M, component_lr=clr)
     print(f"final loss: {history[-1]['loss']:.4f}")
     return state, history

@@ -5,11 +5,14 @@ checkpoint hooks.
 
 Each iteration consumes one ROUND batch `[M, steps_per_round * b, ...]`;
 `TrainConfig.steps` counts GRADIENT steps, so round-based FL algorithms run
-`steps // steps_per_round` rounds. History entries are keyed by gradient
-step for cross-algorithm comparability.
+`ceil(steps / steps_per_round)` rounds (the budget rounds UP — it is never
+silently truncated; the effective step count is logged when it differs).
+History entries are keyed by gradient step for cross-algorithm
+comparability.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional
@@ -17,7 +20,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-from repro.core.algorithms import HParams, get_algorithm
+from repro.core.algorithms import HParams, get_algorithm, num_rounds
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.optim.per_component import ComponentLR
@@ -36,6 +39,9 @@ class TrainConfig:
     checkpoint_every: int = 0  # in rounds
     microbatches: int = 1
     seed: int = 0
+    prox_mu: float = 0.01  # fedprox proximal strength
+    momentum: float = 0.9  # smofi server-side momentum
+    num_clusters: int = 2  # parallelsfl cluster count
 
 
 def train(
@@ -56,14 +62,22 @@ def train(
     alg = get_algorithm(tcfg.algorithm)
     hp = HParams(lr=tcfg.lr, local_steps=tcfg.local_steps,
                  optimizer=optimizer, component_lr=component_lr,
-                 microbatches=tcfg.microbatches)
+                 microbatches=tcfg.microbatches, prox_mu=tcfg.prox_mu,
+                 momentum=tcfg.momentum, num_clusters=tcfg.num_clusters)
     spr = alg.steps_per_round(hp)
-    rounds = max(tcfg.steps // spr, 1)
+    rounds = num_rounds(tcfg.steps, spr)
+    if rounds * spr != tcfg.steps:
+        log(f"note: {tcfg.steps} requested steps round UP to {rounds} rounds "
+            f"x {spr} steps/round = {rounds * spr} effective gradient steps")
 
     rng = jax.random.PRNGKey(tcfg.seed)
     state = alg.init_state(model, rng, num_clients, hp)
     round_fn = jax.jit(alg.round_fn(model, num_clients, hp))
     eval_fn = jax.jit(alg.eval_fn(model, num_clients)) if eval_batches else None
+    # ONE cycling iterator for the whole run: a list of eval batches is
+    # rotated through (not stuck on its first element), and a generator is
+    # consumed once then replayed instead of being drained mid-run.
+    eval_iter = itertools.cycle(eval_batches) if eval_fn is not None else None
 
     history = []
     t0 = time.time()
@@ -73,17 +87,23 @@ def train(
             break
         state, metrics = round_fn(state, batch)
         rounds_done = i + 1
-        if (i + 1) % tcfg.log_every == 0 or i == 0 or i == rounds - 1:
+        do_log = (i + 1) % tcfg.log_every == 0 or i == 0 or i == rounds - 1
+        # eval runs on its OWN cadence — never gated behind the log cadence —
+        # and its history entry is recorded unconditionally
+        do_eval = (eval_fn is not None and tcfg.eval_every
+                   and (i + 1) % tcfg.eval_every == 0)
+        if do_log or do_eval:
             m = {k: np.asarray(v) for k, v in metrics.items()}
             entry = {"step": (i + 1) * spr, "round": i + 1,
                      "loss": float(m["loss"]), "time": time.time() - t0}
-            if eval_fn is not None and tcfg.eval_every and (i + 1) % tcfg.eval_every == 0:
-                ev = eval_fn(state, next(iter(eval_batches)))
+            if do_eval:
+                ev = eval_fn(state, next(eval_iter))
                 entry["acc_mtl"] = float(ev.get("acc_mtl", float("nan")))
             history.append(entry)
-            log(f"step {entry['step']:>6d}  loss {entry['loss']:.4f}"
-                + (f"  acc_mtl {entry['acc_mtl']:.3f}" if "acc_mtl" in entry else "")
-                + f"  ({entry['time']:.1f}s)")
+            if do_log:
+                log(f"step {entry['step']:>6d}  loss {entry['loss']:.4f}"
+                    + (f"  acc_mtl {entry['acc_mtl']:.3f}" if "acc_mtl" in entry else "")
+                    + f"  ({entry['time']:.1f}s)")
         if tcfg.checkpoint_path and tcfg.checkpoint_every and (i + 1) % tcfg.checkpoint_every == 0:
             save_algorithm_state(tcfg.checkpoint_path, alg, state,
                                  extra={"step": (i + 1) * spr})

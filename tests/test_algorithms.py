@@ -40,6 +40,8 @@ from repro.train.loop import TrainConfig, train
 from repro.utils.sharding import strip
 
 CORE_ALGS = ["mtsl", "splitfed", "fedavg", "fedem"]
+NEW_ALGS = ["fedprox", "parallelsfl", "smofi"]
+ALL_ALGS = CORE_ALGS + NEW_ALGS
 
 # Captured from the pre-refactor run_algorithm (per-algorithm if/elif ladder)
 # on paper-mlp smoke: alpha=0, steps=12, lr=0.1, batch_per_client=8,
@@ -69,18 +71,37 @@ GOLDEN = {
         "loss": [0.0, 0.0, 0.0],
         "acc": [(4, 0.348958), (8, 0.427083), (12, 0.625)],
     },
+    # PR-2 baselines, captured at the same seed/settings on registration
+    # (paper-mlp smoke: alpha=0, steps=12, lr=0.1, batch_per_client=8,
+    # eval_every=1, seed=0, local_steps=4; default prox_mu=0.01,
+    # momentum=0.9, num_clusters=2).
+    "fedprox": {
+        "local_steps": 4,
+        "loss": [5.724277, 3.353688, 1.729838],
+        "acc": [(4, 0.307292), (8, 0.390625), (12, 0.421875)],
+    },
+    "parallelsfl": {
+        "local_steps": 4,
+        "loss": [4.868305, 2.918222, 1.86091],
+        "acc": [(4, 0.411458), (8, 0.484375), (12, 0.567708)],
+    },
+    "smofi": {
+        "local_steps": 4,
+        "loss": [5.404846, 1.72342, 0.740975],
+        "acc": [(4, 0.369792), (8, 0.40625), (12, 0.416667)],
+    },
 }
 
 
 def test_registry_lists_core_algorithms():
     names = list_algorithms()
-    for alg in CORE_ALGS:
+    for alg in ALL_ALGS:
         assert alg in names
     with pytest.raises(KeyError, match="registered"):
         get_algorithm("no-such-algorithm")
 
 
-@pytest.mark.parametrize("alg", CORE_ALGS)
+@pytest.mark.parametrize("alg", ALL_ALGS)
 def test_parity_with_prerefactor_trajectories(alg):
     g = GOLDEN[alg]
     r = run_algorithm("paper-mlp", alg, alpha=0.0, steps=12, lr=0.1,
@@ -92,6 +113,23 @@ def test_parity_with_prerefactor_trajectories(alg):
                                [a for _, a in g["acc"]], atol=1e-4)
 
 
+def test_fedprox_mu_zero_matches_fedavg_and_mu_pulls_toward_anchor():
+    """mu=0 is exactly FedAvg (same trace); a large mu visibly damps the
+    local update (the proximal pull toward the round-start model)."""
+    r_avg = run_algorithm("paper-mlp", "fedavg", alpha=0.0, steps=12, lr=0.1,
+                          batch_per_client=8, eval_every=1, seed=0, smoke=True,
+                          local_steps=4)
+    r_mu0 = run_algorithm("paper-mlp", "fedprox", alpha=0.0, steps=12, lr=0.1,
+                          batch_per_client=8, eval_every=1, seed=0, smoke=True,
+                          local_steps=4, hparams={"prox_mu": 0.0})
+    np.testing.assert_allclose(r_mu0.loss_curve, r_avg.loss_curve, rtol=1e-6)
+    r_big = run_algorithm("paper-mlp", "fedprox", alpha=0.0, steps=12, lr=0.1,
+                          batch_per_client=8, eval_every=1, seed=0, smoke=True,
+                          local_steps=4, hparams={"prox_mu": 10.0})
+    # a strong anchor slows optimization: the final loss stays higher
+    assert r_big.loss_curve[-1] > r_avg.loss_curve[-1]
+
+
 def _smoke_setup():
     cfg = get_config("paper-mlp", smoke=True)
     model = build_model(cfg)
@@ -99,7 +137,7 @@ def _smoke_setup():
     return cfg, model, src
 
 
-@pytest.mark.parametrize("alg", CORE_ALGS)
+@pytest.mark.parametrize("alg", ALL_ALGS)
 def test_train_loop_drives_all_algorithms(alg):
     cfg, model, src = _smoke_setup()
     M = cfg.num_clients
@@ -116,7 +154,7 @@ def test_train_loop_drives_all_algorithms(alg):
     assert history[-1]["step"] == 8
 
 
-@pytest.mark.parametrize("alg", CORE_ALGS)
+@pytest.mark.parametrize("alg", ALL_ALGS)
 def test_algorithm_state_checkpoint_roundtrip(alg, tmp_path):
     cfg, model, src = _smoke_setup()
     M = cfg.num_clients
@@ -204,3 +242,71 @@ def test_duplicate_registration_rejected():
     toy = _register_toy()
     with pytest.raises(ValueError, match="already registered"):
         register_algorithm(toy)
+
+
+# ---------------------------------------------------------------------------
+# train-loop regressions (eval cadence, eval-batch iterator, step accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_eval_recorded_when_cadences_coprime():
+    """eval_every must run on its OWN cadence: with log_every=5 and
+    eval_every=3 (coprime) over 12 rounds, evals at rounds 3, 6, 9, 12 must
+    all be recorded in history — the old loop nested eval inside the log
+    branch and silently skipped rounds 3, 6, 9."""
+    cfg, model, src = _smoke_setup()
+    tcfg = TrainConfig(steps=12, algorithm="mtsl", lr=0.1, log_every=5,
+                       eval_every=3, seed=0)
+    batches = client_batches(src, 4, steps=12, seed=0)
+    tb = _test_batches(cfg, src, per_task=16)
+    _, history = train(model, sgd(0.1), batches, tcfg, cfg.num_clients,
+                       eval_batches=[tb], log=lambda s: None)
+    eval_rounds = [e["round"] for e in history if "acc_mtl" in e]
+    assert eval_rounds == [3, 6, 9, 12], history
+
+
+def test_eval_batches_cycle_not_stuck_on_first():
+    """The loop must hold ONE cycling eval iterator: a list of eval batches
+    rotates (old code re-took the first element forever) and a generator is
+    replayed rather than drained (old code raised StopIteration once the
+    generator was exhausted)."""
+    cfg, model, src = _smoke_setup()
+    tb = _test_batches(cfg, src, per_task=16)
+
+    class CountingBatches(list):
+        iters = 0
+
+        def __iter__(self):
+            type(self).iters += 1
+            return super().__iter__()
+
+    lst = CountingBatches([tb, tb])
+    tcfg = TrainConfig(steps=6, algorithm="mtsl", lr=0.1, log_every=1,
+                       eval_every=1, seed=0)
+    _, history = train(model, sgd(0.1),
+                       client_batches(src, 4, steps=6, seed=0), tcfg,
+                       cfg.num_clients, eval_batches=lst, log=lambda s: None)
+    assert CountingBatches.iters == 1  # one iterator for the whole run
+    assert all("acc_mtl" in e for e in history)
+
+    # a 2-element GENERATOR survives 6 evals (cycled, not consumed)
+    gen = (b for b in [tb, tb])
+    _, history = train(model, sgd(0.1),
+                       client_batches(src, 4, steps=6, seed=0), tcfg,
+                       cfg.num_clients, eval_batches=gen, log=lambda s: None)
+    assert sum("acc_mtl" in e for e in history) == 6
+
+
+def test_step_budget_rounds_up_not_truncates():
+    """steps=6 with local_steps=4 must run 2 rounds (8 effective gradient
+    steps), not silently truncate to 1 round / 4 steps."""
+    cfg, model, src = _smoke_setup()
+    logs = []
+    tcfg = TrainConfig(steps=6, algorithm="fedavg", lr=0.1, local_steps=4,
+                       log_every=1, seed=0)
+    batches = client_batches(src, 4 * 4, steps=2, seed=0)
+    _, history = train(model, sgd(0.1), batches, tcfg, cfg.num_clients,
+                       log=logs.append)
+    assert history[-1]["round"] == 2
+    assert history[-1]["step"] == 8
+    assert any("round UP" in s for s in logs)  # effective count is announced

@@ -1,0 +1,97 @@
+"""Analytic comm accounting (core/comm_cost.py) vs. REAL model shapes.
+
+`_smashed_elems` is the per-client element count of the primary smashed
+tensor ("h") crossing the split boundary; every config-family branch is
+checked here against the actual `tower_forward` output, including resnet
+configs with odd spatial sizes (the stride-2 SAME convs CEIL-divide the
+resolution — a floor-division formula undercounts).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import comm_cost
+from repro.models import build_model
+from repro.utils.sharding import strip
+
+B = 3  # batch_per_client used throughout
+
+
+def _actual_smashed_elems(cfg, inputs):
+    model = build_model(cfg)
+    tp = strip(model.init_tower(jax.random.PRNGKey(0)))
+    return int(np.prod(model.tower_forward(tp, inputs)["h"].shape))
+
+
+def _image_batch(cfg, rng):
+    x = jax.random.normal(
+        rng, (B, cfg.image_size, cfg.image_size, cfg.image_channels))
+    if cfg.family == "mlp":
+        x = x[..., 0]
+    return {"image": x}
+
+
+def test_smashed_elems_mlp():
+    cfg = get_config("paper-mlp", smoke=True)
+    actual = _actual_smashed_elems(cfg, _image_batch(cfg, jax.random.PRNGKey(1)))
+    assert comm_cost._smashed_elems(cfg, B) == actual
+
+
+@pytest.mark.parametrize("image_size,split_layers,stages", [
+    (16, 1, ((8, 1), (16, 1))),          # smoke default: no downsampling yet
+    (16, 2, ((8, 1), (16, 1))),          # one stride-2 stage, even size
+    (15, 2, ((8, 1), (16, 1))),          # odd size: ceil(15/2)=8, floor=7
+    (20, 2, ((8, 2), (16, 2))),          # table2 CPU-sized conv variant
+    (32, 3, ((16, 2), (32, 2), (64, 2))),  # paper ResNet-16 split=3
+    (25, 3, ((8, 1), (16, 1), (32, 1))),   # odd size through TWO halvings
+])
+def test_smashed_elems_resnet_matches_real_shapes(image_size, split_layers,
+                                                  stages):
+    cfg = get_config("paper-resnet16", smoke=True).with_updates(
+        image_size=image_size, split_layers=split_layers, resnet_stages=stages)
+    actual = _actual_smashed_elems(cfg, _image_batch(cfg, jax.random.PRNGKey(2)))
+    assert comm_cost._smashed_elems(cfg, B) == actual
+
+
+def test_smashed_elems_lm():
+    cfg = get_config("gemma3-12b", smoke=True)
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    actual = _actual_smashed_elems(cfg, {"tokens": toks})
+    assert comm_cost._smashed_elems(cfg, B, seq_len=S) == actual
+
+
+def test_smashed_elems_encdec():
+    cfg = get_config("whisper-tiny", smoke=True)
+    frames = jax.random.normal(jax.random.PRNGKey(4),
+                               (B, cfg.encoder_seq, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, 8), 0, cfg.vocab_size)
+    actual = _actual_smashed_elems(cfg, {"frames": frames, "tokens": toks})
+    assert comm_cost._smashed_elems(cfg, B) == actual
+
+
+def test_round_cost_new_algorithms():
+    """The PR-2 comm models: fedprox == fedavg; smofi == k·smashed + tower
+    federation; parallelsfl adds the C-replica server merge on top."""
+    cfg = get_config("paper-mlp", smoke=True)
+    M, b, k, C = cfg.num_clients, 8, 4, 2
+    tower_p, server_p = 1000, 3000
+    total_p = tower_p + server_p
+
+    avg = comm_cost.round_cost("fedavg", cfg, M, b, total_params=total_p)
+    prox = comm_cost.round_cost("fedprox", cfg, M, b, total_params=total_p)
+    assert prox == avg
+
+    one = comm_cost.round_cost("mtsl", cfg, M, b)
+    smofi = comm_cost.round_cost("smofi", cfg, M, b, tower_params=tower_p,
+                                 local_steps=k)
+    assert smofi.up_bytes == k * one.up_bytes + M * tower_p * 4
+    assert smofi.down_bytes == k * one.down_bytes + M * tower_p * 4
+
+    psfl = comm_cost.round_cost("parallelsfl", cfg, M, b,
+                                tower_params=tower_p, server_params=server_p,
+                                local_steps=k, num_clusters=C)
+    assert psfl.up_bytes == smofi.up_bytes + C * server_p * 4
+    assert psfl.down_bytes == smofi.down_bytes + C * server_p * 4
