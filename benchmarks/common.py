@@ -10,6 +10,13 @@ benchmarkable here with zero changes (see examples/custom_algorithm.py).
 Round semantics (faithful to the compared papers) are documented in
 core/algorithms.py. Progress is tracked in gradient steps
 (rounds x local_steps) and in transmitted bytes (core/comm_cost.py).
+
+Client participation & stragglers: pass a `schedule`
+(repro.core.schedule.ScheduleConfig) to sample a subset of clients per
+round and cap slow clients' local-step budgets; byte accounting then
+scales with each round's PARTICIPANTS, not M (benchmarks/
+fig5_participation.py sweeps this). The default is the classic full
+synchronous round.
 """
 from __future__ import annotations
 
@@ -21,10 +28,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.algorithms import HParams, get_algorithm, num_rounds
+from repro.core.algorithms import HParams, get_algorithm, jit_round_fn, num_rounds
+from repro.core.schedule import (
+    ScheduleConfig,
+    capability_profile,
+    full_schedule,
+    round_schedule,
+)
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
 from repro.models import build_model
+from repro.utils.jit_cache import enable_compilation_cache  # noqa: F401 (re-export)
 from repro.utils.sharding import strip
 
 ALGS = ["fedavg", "fedprox", "fedem", "splitfed", "smofi", "parallelsfl",
@@ -41,6 +55,8 @@ class RunResult:
     steps_to_acc: dict  # acc threshold -> gradient steps (or None)
     bytes_to_acc: dict  # acc threshold -> transmitted bytes (or None)
     wall_s: float
+    total_bytes: int = 0  # cumulative bytes over the whole run
+    mean_participants: float = 0.0  # avg participating clients per round
 
 
 def make_source(cfg, alpha: float, noise_sigma: float = 0.0, seed: int = 0):
@@ -86,6 +102,7 @@ def run_algorithm(
     local_steps: int = LOCAL_STEPS,
     cfg_overrides: dict | None = None,
     hparams: dict | None = None,
+    schedule: ScheduleConfig | None = None,
 ) -> RunResult:
     cfg = get_config(arch, smoke=smoke)
     if cfg_overrides:
@@ -99,24 +116,44 @@ def run_algorithm(
     t0 = time.time()
 
     alg = get_algorithm(algorithm)
+    scfg = schedule or ScheduleConfig()
+    cap = capability_profile(M, scfg)
     hp = HParams(lr=lr, local_steps=local_steps, **(hparams or {}))
+    if not scfg.is_trivial and hp.capability is None:
+        hp = hp.with_updates(capability=tuple(cap))
     spr = alg.steps_per_round(hp)
     rounds = num_rounds(steps, spr)
     per_round_batch = batch_per_client * spr
 
     state = alg.init_state(model, rng0, M, hp)
-    round_fn = jax.jit(alg.round_fn(model, M, hp))
+    round_fn = jit_round_fn(alg, model, M, hp)
     eval_fn = jax.jit(alg.eval_fn(model, M))
-    per_round = alg.round_bytes(cfg, M, batch_per_client, hp,
-                                tower_params=tower_p, total_params=total_p)
+    trivial_sched = full_schedule(M, spr) if scfg.is_trivial else None
+
+    def _round_bytes(P):
+        return alg.round_bytes(cfg, M, batch_per_client, hp,
+                               tower_params=tower_p, total_params=total_p,
+                               num_participants=P)
+
+    # trivial schedules cost the same every round — compute it once
+    full_round_bytes = _round_bytes(M) if trivial_sched is not None else None
 
     acc_curve, loss_curve = [], []
     steps_to = {a: None for a in acc_thresholds}
     bytes_to = {a: None for a in acc_thresholds}
+    cum_bytes = 0
+    participants = []
     for i, batch in enumerate(
         client_batches(src, per_round_batch, steps=rounds, seed=seed)
     ):
-        state, metrics = round_fn(state, batch)
+        sched = (trivial_sched if trivial_sched is not None
+                 else round_schedule(scfg, M, spr, i, cap))
+        state, metrics = round_fn(state, batch, sched)
+        P = M if trivial_sched is not None else sched.num_participants
+        participants.append(P)
+        # bytes scale with THIS round's participants, not M
+        cum_bytes += (full_round_bytes if full_round_bytes is not None
+                      else _round_bytes(P))
         loss_curve.append(float(metrics["loss"]))
         if (i + 1) % eval_every == 0 or i == rounds - 1:
             acc = float(eval_fn(state, tb)["acc_mtl"])
@@ -125,7 +162,9 @@ def run_algorithm(
             for a in acc_thresholds:
                 if steps_to[a] is None and acc >= a:
                     steps_to[a] = gsteps
-                    bytes_to[a] = (i + 1) * per_round
+                    bytes_to[a] = cum_bytes
     final_acc = acc_curve[-1][1] if acc_curve else float("nan")
     return RunResult(algorithm, final_acc, acc_curve, loss_curve,
-                     steps_to, bytes_to, time.time() - t0)
+                     steps_to, bytes_to, time.time() - t0,
+                     total_bytes=cum_bytes,
+                     mean_participants=float(np.mean(participants)) if participants else 0.0)

@@ -21,12 +21,19 @@ def main(argv=None) -> None:
     ap.add_argument("--roofline", action="store_true",
                     help="also run the roofline table (slow: spawns dry-runs)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table2,table3,fig2,fig3,fig4")
+                    help="comma-separated subset: table2,table3,fig2,fig3,"
+                         "fig4,fig5")
     args = ap.parse_args(argv)
 
     from benchmarks import (ablation_split_point, fig2_lr_tuning,
                             fig3_training_cost, fig4_robustness,
-                            table2_accuracy, table3_new_client)
+                            fig5_participation, table2_accuracy,
+                            table3_new_client)
+    from benchmarks.common import enable_compilation_cache
+
+    # persistent jit cache (JAX_COMPILATION_CACHE_DIR): the suite retraces
+    # the same seven algorithms across figures — compile each once
+    enable_compilation_cache()
 
     suites = {
         "fig2": fig2_lr_tuning.run,
@@ -34,6 +41,7 @@ def main(argv=None) -> None:
         "table3": table3_new_client.run,
         "fig3": fig3_training_cost.run,
         "fig4": fig4_robustness.run,
+        "fig5": fig5_participation.run,
         "ablation_split": ablation_split_point.run,
     }
     if args.only:

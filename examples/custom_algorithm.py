@@ -21,7 +21,10 @@ from repro.utils.sharding import strip
 def local_round(model, num_clients, hp):
     loss_fn = federation.full_model_loss(model)
 
-    def round_fn(state, batch):
+    # round_fn takes (state, batch, schedule); "local" never communicates,
+    # so participation masks have nothing to federate — a pure-local round
+    # simply ignores the schedule (clients always train on their own data)
+    def round_fn(state, batch, schedule=None):
         def client_run(tp, sp, client_batch):
             def one_step(p, mb):
                 loss, grads = jax.value_and_grad(lambda q: loss_fn(q, mb))(p)

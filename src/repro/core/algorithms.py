@@ -21,7 +21,7 @@ Adding a new algorithm is a single registration::
     register_algorithm(Algorithm(
         name="my-alg",
         init_state=lambda model, rng, M, hp: ...,   # -> opaque state
-        round_fn=lambda model, M, hp: ...,          # -> fn(state, batch) -> (state, metrics)
+        round_fn=lambda model, M, hp: ...,          # -> fn(state, batch, schedule)
         eval_fn=lambda model, M: ...,               # -> fn(state, batch) -> {"acc_mtl": ...}
         round_bytes=lambda cfg, M, b, hp, **kw: ...,  # bytes per round
         steps_per_round=lambda hp: hp.local_steps,
@@ -29,7 +29,10 @@ Adding a new algorithm is a single registration::
 
 (see examples/custom_algorithm.py for a complete ~30-line demo). The
 round batch is `[M, steps_per_round * b, ...]`; round-based algorithms
-split it into local steps with `split_local_steps`.
+split it into local steps with `split_local_steps`. `schedule` is a
+core.schedule.ClientSchedule — which clients participate this round and
+how many local steps each completes (compute heterogeneity); all-ones /
+full-budget (or schedule=None) is the classic full synchronous round.
 
 Round semantics of the built-ins (faithful to the compared papers):
   mtsl:     every round = ONE split-learning step (smashed data crosses).
@@ -97,6 +100,10 @@ class HParams:
     prox_mu: float = 0.01  # FedProx proximal strength
     momentum: float = 0.9  # SMoFi server-side heavy-ball coefficient
     num_clusters: int = 2  # ParallelSFL cluster count (clamped to [1, M])
+    # per-client relative compute speeds in (0, 1] (a tuple so HParams stays
+    # hashable); ParallelSFL clusters similar-capability clients together
+    # (federation.cluster_assignment). None -> round-robin clustering.
+    capability: Optional[tuple] = None
 
     def with_updates(self, **kw) -> "HParams":
         return replace(self, **kw)
@@ -112,14 +119,19 @@ class Algorithm:
 
     Fields (all builders; `hp` is an HParams):
       init_state(model, rng, num_clients, hp) -> state  (opaque pytree)
-      round_fn(model, num_clients, hp) -> fn(state, batch) -> (state, metrics)
-          `batch` is [M, steps_per_round(hp) * b, ...]; `metrics` must
-          contain "loss". The returned fn must be jit-able.
+      round_fn(model, num_clients, hp) -> fn(state, batch, schedule=None)
+          -> (state, metrics). `batch` is [M, steps_per_round(hp) * b, ...];
+          `schedule` is a core.schedule.ClientSchedule (participation mask +
+          per-client local-step budgets; None = all clients, full budget);
+          `metrics` must contain "loss". The returned fn must be jit-able
+          with the schedule as a traced pytree argument.
       eval_fn(model, num_clients) -> fn(state, batch) -> metrics
           (classifiers report "acc_mtl" / "per_task_acc").
       steps_per_round(hp) -> gradient steps one round advances.
       round_bytes(cfg, num_clients, batch_per_client, hp,
-                  tower_params=..., total_params=...) -> bytes per round.
+                  tower_params=..., total_params=...,
+                  num_participants=...) -> bytes per round; per-client
+          traffic scales with the round's participants, not M.
       state_to_tree / state_from_tree: (de)serialization hooks for
           checkpointing; default identity (msgpack handles NamedTuples).
       serve_params(state) -> {"towers","server"} params for ServeEngine,
@@ -127,6 +139,9 @@ class Algorithm:
           (e.g. per-client servers, mixtures).
       uses_optimizer: whether round_fn consumes hp.optimizer (round-based
           FL baselines hard-code the papers' plain local SGD at hp.lr).
+      donate_state: whether drivers may jit round_fn with
+          donate_argnums=(0,) (buffer reuse across rounds). Set False for
+          algorithms whose eval/serving must read the PRE-round state.
     """
 
     name: str
@@ -139,6 +154,7 @@ class Algorithm:
     state_from_tree: Callable[[PyTree], PyTree] = _identity
     serve_params: Optional[Callable[[PyTree], PyTree]] = None
     uses_optimizer: bool = False
+    donate_state: bool = True
     description: str = ""
 
 
@@ -154,6 +170,18 @@ def num_rounds(total_steps: int, steps_per_round: int) -> int:
     so a requested step budget is never silently truncated when it is not a
     multiple of the round size (the final partial round trains in full)."""
     return max(-(-total_steps // steps_per_round), 1)
+
+
+def jit_round_fn(alg: "Algorithm", model, num_clients: int, hp: HParams):
+    """Build and jit `alg`'s round driver, donating the input state buffers
+    so they are reused across rounds instead of reallocated.
+
+    Donation is skipped on CPU (unimplemented there — jax would warn and
+    ignore it) and for algorithms that opt out via `donate_state=False`
+    (e.g. because their eval reads the pre-round state)."""
+    fn = alg.round_fn(model, num_clients, hp)
+    donate = alg.donate_state and jax.default_backend() != "cpu"
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -209,8 +237,12 @@ def _mtsl_round(model, num_clients, hp: HParams):
     step = build_train_step(model, opt, num_clients, "mtsl",
                             microbatches=hp.microbatches)
 
-    def round_fn(state, batch):
-        return step(state, batch, clr)
+    def round_fn(state, batch, schedule=None):
+        # one split step per round: the budget is moot, but the per-task
+        # loss sum is masked so only participants' towers (and their server
+        # contributions) receive gradient
+        mask = None if schedule is None else schedule.mask
+        return step(state, batch, clr, mask)
 
     return round_fn
 
@@ -225,8 +257,9 @@ def _mtsl_eval(model, num_clients):
 
 
 def _mtsl_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                total_params=None):
-    return comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client).total
+                total_params=None, num_participants=None):
+    return comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client,
+                                num_participants=num_participants).total
 
 
 register_algorithm(Algorithm(
@@ -259,8 +292,8 @@ def _splitfed_round(model, num_clients, hp: HParams):
     rf = federation.build_splitfed_round(model, hp.lr, num_clients,
                                          hp.local_steps)
 
-    def round_fn(state, batch):
-        return rf(state, split_local_steps(batch, hp.local_steps))
+    def round_fn(state, batch, schedule=None):
+        return rf(state, split_local_steps(batch, hp.local_steps), schedule)
 
     return round_fn
 
@@ -276,14 +309,17 @@ def _shared_state_eval(model, num_clients):
 
 
 def _splitfed_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                    total_params=None):
+                    total_params=None, num_participants=None):
     # k split steps' smashed traffic + one tower-federation exchange
     smashed = comm_cost.round_cost(
-        "mtsl", cfg, num_clients, batch_per_client).total * hp.local_steps
+        "mtsl", cfg, num_clients, batch_per_client,
+        num_participants=num_participants).total * hp.local_steps
     fed = comm_cost.round_cost(
         "splitfed", cfg, num_clients, batch_per_client,
-        tower_params=tower_params).total \
-        - comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client).total
+        tower_params=tower_params,
+        num_participants=num_participants).total \
+        - comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client,
+                               num_participants=num_participants).total
     return smashed + fed
 
 
@@ -312,17 +348,17 @@ def _fedavg_round(model, num_clients, hp: HParams):
     rf = federation.build_fedavg_round(model, hp.lr, num_clients,
                                        hp.local_steps)
 
-    def round_fn(state, batch):
-        return rf(state, split_local_steps(batch, hp.local_steps))
+    def round_fn(state, batch, schedule=None):
+        return rf(state, split_local_steps(batch, hp.local_steps), schedule)
 
     return round_fn
 
 
 def _fedavg_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                  total_params=None):
+                  total_params=None, num_participants=None):
     return comm_cost.round_cost(
         "fedavg", cfg, num_clients, batch_per_client,
-        total_params=total_params).total
+        total_params=total_params, num_participants=num_participants).total
 
 
 register_algorithm(Algorithm(
@@ -351,10 +387,11 @@ def _fedem_round(model, num_clients, hp: HParams):
     rf = federation.build_fedem_round(model, hp.lr, num_clients,
                                       hp.num_components, hp.local_steps)
 
-    def round_fn(state, batch):
+    def round_fn(state, batch, schedule=None):
         comps, pi = state
         comps, pi, metrics = rf(comps, pi,
-                                split_local_steps(batch, hp.local_steps))
+                                split_local_steps(batch, hp.local_steps),
+                                schedule)
         return (comps, pi), metrics
 
     return round_fn
@@ -372,10 +409,11 @@ def _fedem_eval(model, num_clients):
 
 
 def _fedem_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                 total_params=None):
+                 total_params=None, num_participants=None):
     return comm_cost.round_cost(
         "fedem", cfg, num_clients, batch_per_client, total_params=total_params,
-        num_components=hp.num_components).total
+        num_components=hp.num_components,
+        num_participants=num_participants).total
 
 
 register_algorithm(Algorithm(
@@ -400,17 +438,17 @@ def _fedprox_round(model, num_clients, hp: HParams):
     rf = federation.build_fedprox_round(model, hp.lr, num_clients,
                                         hp.local_steps, hp.prox_mu)
 
-    def round_fn(state, batch):
-        return rf(state, split_local_steps(batch, hp.local_steps))
+    def round_fn(state, batch, schedule=None):
+        return rf(state, split_local_steps(batch, hp.local_steps), schedule)
 
     return round_fn
 
 
 def _fedprox_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                   total_params=None):
+                   total_params=None, num_participants=None):
     return comm_cost.round_cost(
         "fedprox", cfg, num_clients, batch_per_client,
-        total_params=total_params).total
+        total_params=total_params, num_participants=num_participants).total
 
 
 register_algorithm(Algorithm(
@@ -430,33 +468,53 @@ register_algorithm(Algorithm(
 
 
 def _parallelsfl_init(model, rng, num_clients, hp: HParams):
-    _, C = federation.cluster_assignment(num_clients, hp.num_clusters)
-    return strip({
+    # the client->cluster map is part of the STATE (so round and eval always
+    # agree); with hp.capability it groups similar-capability clients
+    cidx, C = federation.cluster_assignment(num_clients, hp.num_clusters,
+                                            hp.capability)
+    state = strip({
         "towers": replicate_tower(model.init_tower, rng, num_clients),
         "servers": replicate_tower(model.init_server,
                                    jax.random.fold_in(rng, 1), C),
     })
+    state["cidx"] = jnp.asarray(cidx, jnp.int32)
+    return state
 
 
 def _parallelsfl_round(model, num_clients, hp: HParams):
+    # cluster count & map come from the STATE (cidx + servers' leading
+    # dim), not hp — a restored checkpoint keeps its own clustering
     rf = federation.build_parallelsfl_round(model, hp.lr, num_clients,
-                                            hp.local_steps, hp.num_clusters)
+                                            hp.local_steps)
 
-    def round_fn(state, batch):
-        return rf(state, split_local_steps(batch, hp.local_steps))
+    def round_fn(state, batch, schedule=None):
+        return rf(state, split_local_steps(batch, hp.local_steps), schedule)
 
     return round_fn
 
 
+def _parallelsfl_from_tree(tree):
+    """Checkpoint restore hook: pre-schedule-era states (no "cidx") get the
+    round-robin map they were trained with backfilled."""
+    if "cidx" not in tree:
+        M = jax.tree.leaves(tree["towers"])[0].shape[0]
+        C = jax.tree.leaves(tree["servers"])[0].shape[0]
+        cidx, _ = federation.cluster_assignment(M, C)
+        tree = {**tree, "cidx": jnp.asarray(cidx, jnp.int32)}
+    return tree
+
+
 def _parallelsfl_bytes(cfg, num_clients, batch_per_client, hp, *,
-                       tower_params=None, total_params=None):
+                       tower_params=None, total_params=None,
+                       num_participants=None):
     server_params = None
     if tower_params is not None and total_params is not None:
         server_params = total_params - tower_params
     return comm_cost.round_cost(
         "parallelsfl", cfg, num_clients, batch_per_client,
         tower_params=tower_params, server_params=server_params,
-        local_steps=hp.local_steps, num_clusters=hp.num_clusters).total
+        local_steps=hp.local_steps, num_clusters=hp.num_clusters,
+        num_participants=num_participants).total
 
 
 register_algorithm(Algorithm(
@@ -465,6 +523,7 @@ register_algorithm(Algorithm(
     round_fn=_parallelsfl_round,
     eval_fn=federation.eval_parallelsfl,
     round_bytes=_parallelsfl_bytes,
+    state_from_tree=_parallelsfl_from_tree,
     description="ParallelSFL [Liao et al. 2024]: cluster-wise split "
                 "federation — towers fed-average within their cluster, "
                 "per-cluster server replicas merge each round "
@@ -493,17 +552,18 @@ def _smofi_round(model, num_clients, hp: HParams):
     rf = federation.build_smofi_round(model, hp.lr, num_clients,
                                       hp.local_steps, hp.momentum)
 
-    def round_fn(state, batch):
-        return rf(state, split_local_steps(batch, hp.local_steps))
+    def round_fn(state, batch, schedule=None):
+        return rf(state, split_local_steps(batch, hp.local_steps), schedule)
 
     return round_fn
 
 
 def _smofi_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                 total_params=None):
+                 total_params=None, num_participants=None):
     return comm_cost.round_cost(
         "smofi", cfg, num_clients, batch_per_client,
-        tower_params=tower_params, local_steps=hp.local_steps).total
+        tower_params=tower_params, local_steps=hp.local_steps,
+        num_participants=num_participants).total
 
 
 register_algorithm(Algorithm(

@@ -80,43 +80,54 @@ def round_cost(
     local_steps: int = 1,
     server_params: int | None = None,
     num_clusters: int = 2,
+    num_participants: int | None = None,
 ) -> RoundCost:
     """Bytes per training round for one of {mtsl, splitfed, fedavg, fedprox,
     fedem, smofi, parallelsfl}.
 
     mtsl/splitfed/fedavg/fedem keep their original one-exchange semantics
     (callers compose local steps themselves); the smofi/parallelsfl branches
-    take `local_steps` and return the full round."""
+    take `local_steps` and return the full round.
+
+    Under partial participation (core/schedule.py) only the round's
+    participants exchange traffic, so every per-client term scales with
+    `num_participants` (default: all M clients). ParallelSFL's C-replica
+    backbone merge still counts all C cluster servers — the replicas are
+    per-cluster edge entities that sync every round regardless of which
+    clients were sampled. Straggler budgets are not modeled here: a
+    participant is billed its full round (an upper bound on smashed
+    traffic)."""
     M = num_clients
+    P = M if num_participants is None else max(1, min(num_participants, M))
     s = _smashed_elems(cfg, batch_per_client, seq_len) * bytes_per_elem
     labels = batch_per_client * max(seq_len, 1) * label_bytes
     if algorithm == "mtsl":
-        return RoundCost(up_bytes=M * (s + labels), down_bytes=M * s)
+        return RoundCost(up_bytes=P * (s + labels), down_bytes=P * s)
     if algorithm == "splitfed":
         assert tower_params is not None
-        fed = M * tower_params * bytes_per_elem
-        return RoundCost(up_bytes=M * (s + labels) + fed, down_bytes=M * s + fed)
+        fed = P * tower_params * bytes_per_elem
+        return RoundCost(up_bytes=P * (s + labels) + fed, down_bytes=P * s + fed)
     if algorithm in ("fedavg", "fedprox"):
         assert total_params is not None
-        fed = M * total_params * bytes_per_elem
+        fed = P * total_params * bytes_per_elem
         return RoundCost(up_bytes=fed, down_bytes=fed)
     if algorithm == "fedem":
         assert total_params is not None
-        fed = num_components * M * total_params * bytes_per_elem
+        fed = num_components * P * total_params * bytes_per_elem
         return RoundCost(up_bytes=fed, down_bytes=fed)
     if algorithm == "smofi":
         # k split steps against per-client server replicas (all server-side,
         # so momentum fusion is free on the edge) + one tower federation
         assert tower_params is not None
-        fed = M * tower_params * bytes_per_elem
-        return RoundCost(up_bytes=local_steps * M * (s + labels) + fed,
-                         down_bytes=local_steps * M * s + fed)
+        fed = P * tower_params * bytes_per_elem
+        return RoundCost(up_bytes=local_steps * P * (s + labels) + fed,
+                         down_bytes=local_steps * P * s + fed)
     if algorithm == "parallelsfl":
         # k split steps + within-cluster tower federation + merging the C
         # cluster server replicas across the backbone
         assert tower_params is not None and server_params is not None
         C = max(1, min(num_clusters, M))
-        fed = M * tower_params * bytes_per_elem + C * server_params * bytes_per_elem
-        return RoundCost(up_bytes=local_steps * M * (s + labels) + fed,
-                         down_bytes=local_steps * M * s + fed)
+        fed = P * tower_params * bytes_per_elem + C * server_params * bytes_per_elem
+        return RoundCost(up_bytes=local_steps * P * (s + labels) + fed,
+                         down_bytes=local_steps * P * s + fed)
     raise ValueError(algorithm)

@@ -23,15 +23,31 @@ Round-based heterogeneity-aware baselines (PR 2) also live here:
                           split federation with per-cluster server replicas.
   build_smofi_round       SMoFi [Yang et al., 2025] — splitfed with
                           step-wise server-side momentum fusion.
+
+Every round builder's returned fn takes `(state, batch, schedule=None)`
+where `schedule` is a core.schedule.ClientSchedule (participation mask +
+per-client local-step budget); None means all clients at full budget —
+bit-identical to the pre-scheduling rounds. Participation semantics:
+federation means average over PARTICIPANTS only, a straggler stops
+contributing gradients once its budget is exhausted, and FedEM freezes
+non-participants' responsibilities.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.schedule import (
+    ClientSchedule,
+    broadcast_weights,
+    full_schedule,
+    participation_bcast_mean,
+    participation_mean,
+    step_activity,
+)
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer, apply_updates
 from repro.utils.sharding import Annotated, axes_of, strip
@@ -118,32 +134,47 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
     traced at all, so `build_fedavg_round` delegates here.
 
     params: {"towers": [M, ...], "servers": [M, ...]} (kept identical across
-    clients between rounds). batch: [M, local_steps, b, ...].
+    clients between rounds). batch: [M, local_steps, b, ...]. With a
+    schedule, a client stops stepping after budget[m] local steps and the
+    round-end average runs over participants only (non-participants still
+    download the new global model).
     """
     loss_fn = full_model_loss(model)
 
-    def round_fn(params, batch):
-        def client_run(tp, sp, client_batch):
+    def round_fn(params, batch, schedule: Optional[ClientSchedule] = None):
+        if schedule is None:
+            schedule = full_schedule(num_clients, local_steps)
+        steps_t = jnp.arange(local_steps)
+
+        def client_run(tp, sp, client_batch, budget):
             anchor = {"tower": tp, "server": sp}
 
-            def one_step(carry, mb):
+            def one_step(carry, xs):
+                mb, t = xs
                 pc = carry
+                active = t < budget  # straggler: budget steps, then hold
                 loss, grads = jax.value_and_grad(lambda p: loss_fn(p, mb))(pc)
                 if mu:
                     grads = jax.tree.map(
                         lambda g, p, a: g + mu * (p - a).astype(g.dtype),
                         grads, pc, anchor)
-                pc = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), pc, grads)
-                return pc, loss
-            pc, losses = jax.lax.scan(one_step, anchor, client_batch)
-            return pc, jnp.mean(losses)
+                stepped = jax.tree.map(
+                    lambda p, g: p - lr * g.astype(p.dtype), pc, grads)
+                pc = jax.tree.map(
+                    lambda n, o: jnp.where(active, n, o), stepped, pc)
+                return pc, (loss, active.astype(jnp.float32))
+            pc, (losses, act) = jax.lax.scan(
+                one_step, anchor, (client_batch, steps_t))
+            # per-client loss over the steps it actually ran
+            return pc, jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
 
         pcs, losses = jax.vmap(client_run)(
-            params["towers"], params["servers"], batch)
-        # federation: average everything, broadcast back
+            params["towers"], params["servers"], batch, schedule.budget)
+        # federation: average over participants, broadcast back to everyone
         avg = jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape), pcs)
+            lambda x: participation_bcast_mean(x, schedule.mask), pcs)
         new = {"towers": avg["tower"], "servers": avg["server"]}
+        losses = losses * schedule.mask
         return new, {"loss": jnp.sum(losses), "per_task": losses}
 
     return round_fn
@@ -162,43 +193,78 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
     """One SplitFed ROUND [Thapa et al.]: for `local_steps` steps the clients
     run split learning against the CENTRAL server model (server updates every
     step, like MTSL); at the end of the round the client-side parts are
-    fed-averaged. params: {"towers": [M,...], "server": ...}."""
+    fed-averaged. params: {"towers": [M,...], "server": ...}. With a
+    schedule, an inactive client (not sampled, or past its straggler budget)
+    contributes zero gradient to the server and its tower holds; the tower
+    federation averages over participants only."""
     cfg = model.cfg
     M = num_clients
     from repro.core.mtsl import make_loss_fn
 
     loss_fn = make_loss_fn(model, M)
 
-    def round_fn(params, batch):
-        def one_step(carry, mb):
+    def round_fn(params, batch, schedule: Optional[ClientSchedule] = None):
+        if schedule is None:
+            schedule = full_schedule(M, local_steps)
+        act = step_activity(schedule.mask, schedule.budget, local_steps)
+
+        def one_step(carry, xs):
+            mb, a = xs
             p = carry
-            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, mb)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, mb, a)
             p = jax.tree.map(lambda q, g: q - lr * g.astype(q.dtype), p, grads)
             return p, metrics["per_task"]
 
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
-        p, per = jax.lax.scan(one_step, params, mbs)
+        p, per = jax.lax.scan(one_step, params, (mbs, act))
         towers = jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape),
-            p["towers"])
+            lambda x: participation_bcast_mean(x, schedule.mask), p["towers"])
         new = {"towers": towers, "server": p["server"]}
-        return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
+        per_last = per[-1] * schedule.mask
+        return new, {"loss": jnp.sum(per_last), "per_task": per_last}
 
     return round_fn
 
 
-def cluster_assignment(num_clients: int, num_clusters: int):
-    """Static round-robin client->cluster map: (cidx [M], C).
+def cluster_assignment(num_clients: int, num_clusters: int, capability=None):
+    """Static client->cluster map: (cidx [M], C).
 
-    `num_clusters` is clamped to [1, M]; round-robin assignment keeps the
+    `num_clusters` is clamped to [1, M]. Without a capability profile the
+    assignment is round-robin. With one (a [M] vector of relative compute
+    speeds, e.g. schedule.capability_profile), clients are sorted by
+    capability and greedily binned into C contiguous chunks — similar-
+    capability clients share a cluster so no fast cluster waits on a
+    straggler [ParallelSFL, Liao et al. 2024]. Both paths keep the
     clusters balanced (sizes differ by at most one) without requiring
     M % C == 0."""
     C = max(1, min(num_clusters, num_clients))
-    return np.arange(num_clients) % C, C
+    if capability is not None:
+        cap = np.asarray(capability, np.float64)
+        if cap.shape != (num_clients,):
+            raise ValueError(
+                f"capability profile has shape {cap.shape}, "
+                f"want ({num_clients},)")
+        # a constant profile carries no heterogeneity signal — keep the
+        # round-robin map (so e.g. a participation-only ScheduleConfig does
+        # not silently change the clustering)
+        if np.ptp(cap) == 0:
+            capability = None
+    if capability is None:
+        return np.arange(num_clients) % C, C
+    order = np.argsort(-cap, kind="stable")  # fastest first, ties stable
+    sizes = np.full(C, num_clients // C)
+    sizes[: num_clients % C] += 1
+    cidx = np.empty(num_clients, np.int64)
+    start = 0
+    for c, sz in enumerate(sizes):
+        cidx[order[start:start + sz]] = c
+        start += sz
+    return cidx, C
 
 
 def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
-                            local_steps: int, num_clusters: int) -> Callable:
+                            local_steps: int) -> Callable:
     """One ParallelSFL ROUND [Liao et al., 2024]: clients are partitioned
     into C balanced clusters, each cluster running split federation against
     its OWN server replica. For `local_steps` steps every client takes a
@@ -207,23 +273,35 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
     aggregation). At round end the towers are fed-averaged WITHIN each
     cluster and the C server replicas are merged globally.
 
-    params: {"towers": [M, ...], "servers": [C, ...]}.
-    batch: [M, local_steps, b, ...].
+    params: {"towers": [M, ...], "servers": [C, ...], "cidx": [M] int32} —
+    the client->cluster map AND cluster count live IN the state (set by
+    cluster_assignment at init, possibly capability-aware), so round,
+    eval, and checkpoints always agree.
+    batch: [M, local_steps, b, ...]. With a schedule, cluster means weight
+    active members only; a cluster whose members are all inactive holds its
+    replica and towers for the round.
     """
     loss_fn = full_model_loss(model)
-    cidx_np, C = cluster_assignment(num_clients, num_clusters)
-    cidx = jnp.asarray(cidx_np)
-    counts = jnp.asarray(np.bincount(cidx_np, minlength=C), jnp.float32)
 
-    def _cluster_mean(x):
-        """[M, ...] per-client values -> [C, ...] per-cluster means."""
-        return jax.ops.segment_sum(x, cidx, num_segments=C) \
-            / counts.reshape((C,) + (1,) * (x.ndim - 1))
+    def round_fn(params, batch, schedule: Optional[ClientSchedule] = None):
+        if schedule is None:
+            schedule = full_schedule(num_clients, local_steps)
+        cidx = params["cidx"]
+        C = jax.tree.leaves(params["servers"])[0].shape[0]
+        act = step_activity(schedule.mask, schedule.budget, local_steps)
 
-    def round_fn(params, batch):
+        def _cluster_wmean(x, w):
+            """[M, ...] values, [M] weights -> [C, ...] weighted means
+            over each cluster's ACTIVE members (all-zero clusters -> 0)."""
+            wc = jax.ops.segment_sum(w, cidx, num_segments=C)  # [C]
+            s = jax.ops.segment_sum(x * broadcast_weights(w, x), cidx,
+                                    num_segments=C)
+            return s / broadcast_weights(jnp.maximum(wc, 1.0), s), wc
+
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
 
-        def one_step(carry, mb):
+        def one_step(carry, xs):
+            mb, a = xs
             towers, servers = carry
             servers_pc = jax.tree.map(lambda s: s[cidx], servers)  # [M, ...]
 
@@ -232,35 +310,50 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
                     lambda p: loss_fn(p, mbm))({"tower": tp, "server": sp})
 
             losses, grads = jax.vmap(client_grad)(towers, servers_pc, mb)
-            towers = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
-                                  towers, grads["tower"])
-            servers = jax.tree.map(
-                lambda p, g: p - lr * _cluster_mean(g).astype(p.dtype),
-                servers, grads["server"])
+            towers = jax.tree.map(
+                lambda p, g: p - lr * (g * broadcast_weights(a, g)).astype(p.dtype),
+                towers, grads["tower"])
+
+            def upd_server(p, g):
+                gm, wc = _cluster_wmean(g, a)
+                stepped = p - lr * gm.astype(p.dtype)
+                # a cluster with no active member this step holds its replica
+                return jnp.where(broadcast_weights(wc > 0, p), stepped, p)
+
+            servers = jax.tree.map(upd_server, servers, grads["server"])
             return (towers, servers), losses
 
         (towers, servers), per = jax.lax.scan(
-            one_step, (params["towers"], params["servers"]), mbs)
-        # end of round: fed-average towers within each cluster, merge replicas
-        towers = jax.tree.map(lambda x: _cluster_mean(x)[cidx], towers)
+            one_step, (params["towers"], params["servers"]), (mbs, act))
+        # end of round: fed-average towers within each cluster over the
+        # round's PARTICIPANTS (idle clusters hold), merge the replicas of
+        # clusters that trained and broadcast the result to all C
+        wc = jax.ops.segment_sum(schedule.mask, cidx, num_segments=C)  # [C]
+        has = (wc > 0).astype(schedule.mask.dtype)
+
+        def merge_towers(x):
+            m, _ = _cluster_wmean(x, schedule.mask)
+            return jnp.where(broadcast_weights(wc[cidx] > 0, x), m[cidx], x)
+
+        towers = jax.tree.map(merge_towers, towers)
+
         servers = jax.tree.map(
-            lambda s: jnp.broadcast_to(jnp.mean(s, 0, keepdims=True), s.shape),
-            servers)
-        new = {"towers": towers, "servers": servers}
-        return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
+            lambda s: participation_bcast_mean(s, has), servers)
+        new = {"towers": towers, "servers": servers, "cidx": cidx}
+        per_last = per[-1] * schedule.mask
+        return new, {"loss": jnp.sum(per_last), "per_task": per_last}
 
     return round_fn
 
 
 def eval_parallelsfl(model: Model, num_clients: int):
-    """Eval {"towers": [M,...], "servers": [C,...]} states: client m is
-    served by its cluster's server replica (C inferred from the state)."""
+    """Eval {"towers": [M,...], "servers": [C,...], "cidx": [M]} states:
+    client m is served by its cluster's server replica, using the SAME
+    client->cluster map the round builder used (stored in the state)."""
     M = num_clients
 
     def eval_fn(params, batch):
-        C = jax.tree.leaves(params["servers"])[0].shape[0]
-        cidx_np, _ = cluster_assignment(M, C)  # SAME map as the round builder
-        cidx = jnp.asarray(cidx_np)
+        cidx = params["cidx"]
         servers_pc = jax.tree.map(lambda s: s[cidx], params["servers"])
 
         def client_eval(tp, sp, inputs, labels):
@@ -295,17 +388,21 @@ def build_smofi_round(model: Model, lr: float, num_clients: int,
     copies.
 
     state: {"towers": [M,...], "server": ..., "smom": ...}.
-    batch: [M, local_steps, b, ...].
+    batch: [M, local_steps, b, ...]. With a schedule, the fused buffer
+    accumulates the mean over ACTIVE clients' server gradients (a step with
+    no active client holds both server and buffer), inactive towers hold,
+    and the round-end tower federation averages over participants.
     """
     loss_fn = full_model_loss(model)
 
-    def _fedavg_bcast(x):
-        return jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
-
-    def round_fn(state, batch):
+    def round_fn(state, batch, schedule: Optional[ClientSchedule] = None):
+        if schedule is None:
+            schedule = full_schedule(num_clients, local_steps)
+        act = step_activity(schedule.mask, schedule.budget, local_steps)
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
 
-        def one_step(carry, mb):
+        def one_step(carry, xs):
+            mb, a = xs
             towers, server, smom = carry
 
             def client_grad(tp, sv, mbm):
@@ -314,22 +411,32 @@ def build_smofi_round(model: Model, lr: float, num_clients: int,
 
             losses, grads = jax.vmap(client_grad, in_axes=(0, None, 0))(
                 towers, server, mb)
-            towers = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
-                                  towers, grads["tower"])
+            towers = jax.tree.map(
+                lambda p, g: p - lr * (g * broadcast_weights(a, g)).astype(p.dtype),
+                towers, grads["tower"])
             # step-wise momentum fusion: the shared buffer accumulates the
-            # clients' mean server gradient
-            smom = jax.tree.map(
-                lambda v, g: momentum * v + jnp.mean(g, 0).astype(v.dtype),
+            # ACTIVE clients' mean server gradient
+            any_act = jnp.sum(a) > 0
+            fused = jax.tree.map(
+                lambda v, g: momentum * v
+                + participation_mean(g, a).astype(v.dtype),
                 smom, grads["server"])
-            server = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
-                                  server, smom)
+            smom = jax.tree.map(
+                lambda n, o: jnp.where(any_act, n, o), fused, smom)
+            stepped = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
+                                   server, smom)
+            server = jax.tree.map(
+                lambda n, o: jnp.where(any_act, n, o), stepped, server)
             return (towers, server, smom), losses
 
         (towers, server, smom), per = jax.lax.scan(
-            one_step, (state["towers"], state["server"], state["smom"]), mbs)
-        new = {"towers": jax.tree.map(_fedavg_bcast, towers),
+            one_step, (state["towers"], state["server"], state["smom"]),
+            (mbs, act))
+        new = {"towers": jax.tree.map(
+                   lambda x: participation_bcast_mean(x, schedule.mask), towers),
                "server": server, "smom": smom}
-        return new, {"loss": jnp.sum(per[-1]), "per_task": per[-1]}
+        per_last = per[-1] * schedule.mask
+        return new, {"loss": jnp.sum(per_last), "per_task": per_last}
 
     return round_fn
 
@@ -372,7 +479,10 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
     components are averaged across clients and pi is updated.
 
     state: (components [K,...] of {"tower","server"}, pi [M,K]).
-    batch: [M, local_steps, b, ...].
+    batch: [M, local_steps, b, ...]. With a schedule, components average
+    over participants only, a straggler's local updates stop at its budget
+    (responsibilities average over the steps it ran), and non-participants'
+    responsibilities pi[m] are FROZEN for the round.
     """
     loss_fn = full_model_loss(model)
     K = num_components
@@ -381,9 +491,16 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
         # comps: [K, ...]; mb: one client's local batch (no client axis)
         return jax.vmap(lambda c: loss_fn(c, mb))(comps)  # [K] (batch-mean)
 
-    def round_fn(components, pi, batch):
-        def client_run(pi_m, client_batch):
-            def one_step(comps, mb):
+    def round_fn(components, pi, batch,
+                 schedule: Optional[ClientSchedule] = None):
+        if schedule is None:
+            schedule = full_schedule(pi.shape[0], local_steps)
+        steps_t = jnp.arange(local_steps)
+
+        def client_run(pi_m, client_batch, budget):
+            def one_step(comps, xs):
+                mb, t = xs
+                active = t < budget
                 l = per_sample_losses(comps, mb)  # [K]
                 r = jax.nn.softmax(jnp.log(pi_m + 1e-12) - l)  # [K]
                 r = jax.lax.stop_gradient(r)
@@ -392,16 +509,25 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
                     return jnp.sum(r * jax.vmap(lambda c: loss_fn(c, mb))(cs))
 
                 grads = jax.grad(wloss)(comps)
-                comps = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
-                                     comps, grads)
-                return comps, r
+                stepped = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                       comps, grads)
+                comps = jax.tree.map(
+                    lambda n, o: jnp.where(active, n, o), stepped, comps)
+                return comps, (r, active.astype(jnp.float32))
 
-            comps, rs = jax.lax.scan(one_step, components, client_batch)
-            return comps, jnp.mean(rs, axis=0)  # new local comps, mean resp
+            comps, (rs, act) = jax.lax.scan(
+                one_step, components, (client_batch, steps_t))
+            # mean responsibility over the steps this client actually ran
+            r_mean = jnp.sum(rs * act[:, None], 0) / jnp.maximum(jnp.sum(act), 1.0)
+            return comps, r_mean
 
-        comps_per_client, r_mean = jax.vmap(client_run)(pi, batch)
-        new_components = jax.tree.map(lambda x: jnp.mean(x, 0), comps_per_client)
-        new_pi = r_mean / jnp.sum(r_mean, axis=-1, keepdims=True)
+        comps_per_client, r_mean = jax.vmap(client_run)(
+            pi, batch, schedule.budget)
+        new_components = jax.tree.map(
+            lambda x: participation_mean(x, schedule.mask), comps_per_client)
+        r_norm = r_mean / jnp.sum(r_mean, axis=-1, keepdims=True)
+        # non-participants keep last round's responsibilities
+        new_pi = jnp.where(schedule.mask[:, None] > 0, r_norm, pi)
         loss = jnp.zeros(())  # recomputed by eval; keep the round cheap
         return new_components, new_pi, {"loss": loss}
 

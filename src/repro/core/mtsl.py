@@ -63,19 +63,39 @@ def _lm_loss(logits, tokens):
 
 
 def make_loss_fn(model: Model, num_clients: int) -> Callable:
-    """loss_fn(params, batch) -> (loss, metrics).
+    """loss_fn(params, batch, participation=None) -> (loss, metrics).
 
     batch entries carry a leading client axis [M, b, ...]:
       LM: {"tokens"} (+"vis" | +"frames"); classifiers: {"image","label"}.
-    Loss = sum over tasks of per-task mean loss (paper Eq. 2).
+    Loss = sum over tasks of per-task mean loss (paper Eq. 2). An optional
+    `participation` mask [M] of {0,1} weights the per-task sum AND stops
+    gradient through masked-out clients' smashed activations — a
+    masked-out client's tower receives zero gradient (including through
+    any auxiliary losses, e.g. the MoE router balance term) and the server
+    sees only participants' TASK gradients. Known limitation: a batch-level
+    auxiliary loss (MoE router balance) is computed over ALL clients'
+    smashed tokens, so non-participants' token values still contribute to
+    the aux value and to its gradient into SERVER params; severing that
+    would need a per-client aux decomposition from server_forward. Exact
+    for classifier families (aux = 0, the paper's experiments). All-ones
+    is bit-identical to no mask.
     """
     cfg = model.cfg
     M = num_clients
     is_classifier = cfg.family in ("mlp", "resnet")
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, participation=None):
         inputs = {k: v for k, v in batch.items() if k != "label"}
         smashed = jax.vmap(model.tower_forward)(params["towers"], inputs)
+        if participation is not None:
+            # sever non-participants' backward path entirely (per-task AND
+            # aux losses); where() with an all-true mask is the identity
+            smashed = jax.tree.map(
+                lambda s: jnp.where(
+                    (participation > 0).reshape(
+                        (M,) + (1,) * (s.ndim - 1)),
+                    s, jax.lax.stop_gradient(s)),
+                smashed)
         # --- smashed-data upload: fold client dim into batch
         flat = jax.tree.map(
             lambda x: x.reshape((-1,) + x.shape[2:]), smashed
@@ -92,7 +112,8 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
             acc = jnp.mean(
                 (jnp.argmax(logits32, -1) == labels).astype(jnp.float32)
             )
-            loss = jnp.sum(per) + aux
+            wper = per if participation is None else per * participation
+            loss = jnp.sum(wper) + aux
             return loss, {"loss": loss, "per_task": per, "acc": acc, "aux": aux}
         tokens = batch["tokens"].reshape((-1,) + batch["tokens"].shape[2:])
         per = jax.vmap(_lm_loss)(
@@ -101,7 +122,8 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
             ),
             batch["tokens"],
         )
-        loss = jnp.sum(per) + aux
+        wper = per if participation is None else per * participation
+        loss = jnp.sum(wper) + aux
         return loss, {"loss": loss, "per_task": per, "aux": aux}
 
     return loss_fn
@@ -136,15 +158,21 @@ def build_train_step(
     algorithm: str = "mtsl",
     microbatches: int = 1,
 ) -> Callable:
-    """Returns train_step(state, batch, component_lr=None) -> (state, metrics)."""
+    """Returns train_step(state, batch, component_lr=None, participation=None)
+    -> (state, metrics). `participation` is an optional [M] {0,1} mask:
+    masked-out clients' towers get zero gradient and the server aggregates
+    participants only (see make_loss_fn); None/all-ones is the full round."""
     loss_fn = make_loss_fn(model, num_clients)
     opt = per_component_lr(base_optimizer, is_client_path)
     sync = federation.sync_transform(algorithm, num_clients)
 
-    def _grads(params, batch):
-        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    def _grads(params, batch, participation=None):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, participation)
 
-    def train_step(state: TrainState, batch, component_lr: Optional[ComponentLR] = None):
+    def train_step(state: TrainState, batch,
+                   component_lr: Optional[ComponentLR] = None,
+                   participation=None):
         if microbatches > 1:
             mbs = jax.tree.map(
                 lambda x: x.reshape((x.shape[0], microbatches, -1) + x.shape[2:]).swapaxes(0, 1),
@@ -152,7 +180,7 @@ def build_train_step(
             )
 
             def body(carry, mb):
-                (loss, metrics), grads = _grads(state.params, mb)
+                (loss, metrics), grads = _grads(state.params, mb, participation)
                 acc_loss, acc_metrics, acc_grads = carry
                 acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
                 acc_metrics = jax.tree.map(jnp.add, acc_metrics, metrics)
@@ -160,7 +188,7 @@ def build_train_step(
 
             zero_g = jax.tree.map(jnp.zeros_like, state.params)
             (loss0, metrics0), g0 = _grads(
-                state.params, jax.tree.map(lambda x: x[0], mbs)
+                state.params, jax.tree.map(lambda x: x[0], mbs), participation
             )
             rest = jax.tree.map(lambda x: x[1:], mbs)
             (loss, metrics, grads), _ = jax.lax.scan(
@@ -170,13 +198,23 @@ def build_train_step(
             grads = jax.tree.map(lambda g: g * inv, grads)
             metrics = jax.tree.map(lambda m: m * inv, metrics)
         else:
-            (loss, metrics), grads = _grads(state.params, batch)
+            (loss, metrics), grads = _grads(state.params, batch, participation)
 
         grads = sync(grads)
         updates, opt_state = opt.update(
             grads, state.opt_state, state.params, state.step,
             component_lr=component_lr,
         )
+        if participation is not None:
+            # freeze non-participants' towers under STATEFUL optimizers
+            # too: zero grads alone would not stop e.g. adam momentum from
+            # moving an offline device's params. (The optimizer moments
+            # themselves still tick — they live server-side.) An all-ones
+            # mask multiplies through as the identity.
+            updates = {**updates, "towers": jax.tree.map(
+                lambda u: u * participation.reshape(
+                    (u.shape[0],) + (1,) * (u.ndim - 1)).astype(u.dtype),
+                updates["towers"])}
         params = apply_updates(state.params, updates)
         return TrainState(params, opt_state, state.step + 1), metrics
 

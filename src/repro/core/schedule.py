@@ -1,0 +1,201 @@
+"""Client-participation & compute-heterogeneity scheduling.
+
+The paper's regime is clients that are heterogeneous in *computation* as
+well as data: real edge deployments sample a subset of devices per round
+(partial participation) and slow devices complete fewer local steps than
+fast ones (stragglers, FedProx §5.2). This module is the per-round
+description of both effects, consumed uniformly by every round builder in
+the Algorithm registry (core/algorithms.py):
+
+  ClientSchedule   one ROUND's jit-compatible schedule — a participation
+                   mask `[M]` and a per-client local-step budget `[M]`.
+                   It is an ordinary pytree of arrays, so `round_fn(state,
+                   batch, schedule)` jits once and is fed fresh schedule
+                   values every round with no retracing.
+  ScheduleConfig   the run-level knobs (participation_rate, straggler_frac,
+                   seed) from which per-round schedules are drawn via a
+                   seeded PRNG stream — fully reproducible.
+  capability_profile  per-client relative compute speed in (0, 1], fixed
+                   for a run (a device property). Stragglers' budgets are
+                   `max(1, floor(capability * local_steps))`, and
+                   `federation.cluster_assignment` can consume the same
+                   profile to group similar-capability clients
+                   (heterogeneity-aware ParallelSFL clustering).
+
+The default all-clients / full-budget schedule (`full_schedule`, or any
+trivial ScheduleConfig) is trace- and trajectory-identical to scheduling-
+free rounds: masks of ones multiply through reductions unchanged and
+`t < budget` is true for every local step, so the seeded parity goldens in
+tests/test_algorithms.py pin the refactor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterator, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# domain-separation constant for the capability draw (so the per-round
+# participation stream never reuses it)
+_CAPABILITY_STREAM = 0x5C4ED
+
+
+class ClientSchedule(NamedTuple):
+    """One round's schedule. A plain pytree of arrays — pass it straight
+    into a jitted round_fn.
+
+    mask:   [M] float32 in {0, 1}; 1 = client participates this round.
+            At least one client always participates.
+    budget: [M] int32 in [1, local_steps]; local steps the client completes
+            before dropping out of the round (straggler simulation).
+            Algorithms with a single step per round (mtsl) ignore it.
+    """
+
+    mask: jnp.ndarray
+    budget: jnp.ndarray
+
+    @property
+    def num_participants(self) -> int:
+        return int(np.asarray(self.mask).sum())
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    """Run-level participation/heterogeneity knobs.
+
+    participation_rate: per-round Bernoulli participation probability per
+        client (>= 1.0 means everyone, every round).
+    straggler_frac: fraction of clients that are slow devices; each slow
+        client draws a fixed capability in [min_capability, 1) and
+        completes only `max(1, floor(capability * local_steps))` of each
+        round's local steps.
+    seed: PRNG seed for BOTH the capability draw and the per-round
+        participation stream (domain-separated, reproducible).
+    """
+
+    participation_rate: float = 1.0
+    straggler_frac: float = 0.0
+    seed: int = 0
+    min_capability: float = 0.25
+
+    @property
+    def is_trivial(self) -> bool:
+        """True iff every round is all-clients at full budget (the
+        pre-scheduling behavior, bit-for-bit)."""
+        return self.participation_rate >= 1.0 and self.straggler_frac <= 0.0
+
+    def with_updates(self, **kw) -> "ScheduleConfig":
+        return replace(self, **kw)
+
+
+def full_schedule(num_clients: int, local_steps: int) -> ClientSchedule:
+    """All clients participate and complete every local step."""
+    return ClientSchedule(
+        mask=jnp.ones((num_clients,), jnp.float32),
+        budget=jnp.full((num_clients,), max(local_steps, 1), jnp.int32),
+    )
+
+
+def capability_profile(num_clients: int, scfg: ScheduleConfig) -> np.ndarray:
+    """[M] relative compute speeds in (0, 1], fixed for the run.
+
+    `straggler_frac` of the clients (chosen by `scfg.seed`) are slow and
+    draw a capability uniform in [min_capability, 1); the rest run at 1.0.
+    """
+    cap = np.ones((num_clients,), np.float64)
+    n_slow = int(round(scfg.straggler_frac * num_clients))
+    n_slow = min(max(n_slow, 0), num_clients)
+    if n_slow:
+        rng = np.random.default_rng([scfg.seed, _CAPABILITY_STREAM])
+        slow = rng.choice(num_clients, size=n_slow, replace=False)
+        cap[slow] = rng.uniform(scfg.min_capability, 1.0, size=n_slow)
+    return cap
+
+
+def budgets_from_capability(capability, local_steps: int) -> np.ndarray:
+    """Straggler budgets: a capability-c client completes
+    max(1, floor(c * local_steps)) of the round's `local_steps` steps."""
+    b = np.floor(np.asarray(capability, np.float64) * max(local_steps, 1))
+    return np.maximum(b, 1).astype(np.int32)
+
+
+def round_schedule(
+    scfg: ScheduleConfig,
+    num_clients: int,
+    local_steps: int,
+    round_idx: int,
+    capability: Optional[np.ndarray] = None,
+) -> ClientSchedule:
+    """The seeded schedule for round `round_idx`.
+
+    Participation is drawn per round from `default_rng([seed, round_idx])`
+    (independent rounds, reproducible stream); at least one client always
+    participates. Budgets come from the fixed capability profile. A trivial
+    config short-circuits to `full_schedule`.
+    """
+    if scfg.is_trivial:
+        return full_schedule(num_clients, local_steps)
+    if capability is None:
+        capability = capability_profile(num_clients, scfg)
+    rng = np.random.default_rng([scfg.seed, int(round_idx)])
+    if scfg.participation_rate >= 1.0:
+        mask = np.ones((num_clients,), bool)
+    else:
+        mask = rng.random(num_clients) < scfg.participation_rate
+        if not mask.any():
+            mask[rng.integers(num_clients)] = True
+    return ClientSchedule(
+        mask=jnp.asarray(mask, jnp.float32),
+        budget=jnp.asarray(budgets_from_capability(capability, local_steps)),
+    )
+
+
+def schedule_stream(
+    scfg: ScheduleConfig, num_clients: int, local_steps: int
+) -> Iterator[ClientSchedule]:
+    """Infinite per-round schedule stream (capability drawn once)."""
+    cap = capability_profile(num_clients, scfg)
+    i = 0
+    while True:
+        yield round_schedule(scfg, num_clients, local_steps, i, cap)
+        i += 1
+
+
+# ---------------------------------------------------------------------------
+# masked reductions shared by the round builders
+# ---------------------------------------------------------------------------
+
+
+def broadcast_weights(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Reshape per-client/per-cluster weights [N] to broadcast over
+    [N, ...]-shaped x."""
+    return w.reshape(w.shape + (1,) * (x.ndim - w.ndim))
+
+
+def participation_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """[M, ...] -> [...]: mean over participating clients only.
+
+    Masked-out clients are ignored EXACTLY (their values are multiplied by
+    0.0 before the sum — property-tested in tests/test_schedule.py); an
+    all-ones mask reduces to sum(x)/M, the plain mean.
+    """
+    wsum = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(x * broadcast_weights(mask, x), axis=0) / wsum
+
+
+def participation_bcast_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """[M, ...] -> [M, ...]: the participation-weighted mean broadcast back
+    to every client (the federation 'download')."""
+    m = participation_mean(x, mask)[None]
+    return jnp.broadcast_to(m, x.shape)
+
+
+def step_activity(mask: jnp.ndarray, budget: jnp.ndarray,
+                  local_steps: int) -> jnp.ndarray:
+    """[k, M] activity matrix: client m is active at local step t iff it
+    participates this round AND t < budget[m] (stragglers drop out of the
+    tail of the round)."""
+    t = jnp.arange(local_steps)
+    in_budget = (t[:, None] < budget[None, :]).astype(mask.dtype)
+    return mask[None, :] * in_budget

@@ -28,6 +28,7 @@ from repro.core.algorithms import (
     list_algorithms,
     num_rounds,
 )
+from repro.core.schedule import ScheduleConfig
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
@@ -50,6 +51,15 @@ def main(argv=None):
                     help="smofi server-side momentum coefficient")
     ap.add_argument("--num-clusters", type=int, default=2,
                     help="parallelsfl cluster count (clamped to [1, M])")
+    ap.add_argument("--participation-rate", type=float, default=1.0,
+                    help="per-round client participation probability "
+                         "(1.0 = classic full synchronous rounds)")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of clients that are slow devices and "
+                         "complete only part of each round's local steps")
+    ap.add_argument("--schedule-seed", type=int, default=None,
+                    help="seed for the participation/straggler stream "
+                         "(default: --seed)")
     ap.add_argument("--batch-per-client", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--alpha", type=float, default=0.0, help="heterogeneity")
@@ -98,13 +108,18 @@ def main(argv=None):
 
     # round-based algorithms ignore component_lr; mtsl applies it (Eq. 9)
     clr = lr_policy.server_scaled(M, args.server_lr_scale)
+    scfg = ScheduleConfig(
+        participation_rate=args.participation_rate,
+        straggler_frac=args.straggler_frac,
+        seed=args.seed if args.schedule_seed is None else args.schedule_seed)
     tcfg = TrainConfig(steps=args.steps, algorithm=args.algorithm,
                        lr=args.lr, local_steps=args.local_steps,
                        checkpoint_path=args.checkpoint,
                        checkpoint_every=100 if args.checkpoint else 0,
                        seed=args.seed, prox_mu=args.prox_mu,
                        momentum=args.momentum,
-                       num_clusters=args.num_clusters)
+                       num_clusters=args.num_clusters,
+                       schedule=scfg)
     state, history = train(model, opt, batches, tcfg, M, component_lr=clr)
     print(f"final loss: {history[-1]['loss']:.4f}")
     return state, history

@@ -9,18 +9,36 @@ Each iteration consumes one ROUND batch `[M, steps_per_round * b, ...]`;
 silently truncated; the effective step count is logged when it differs).
 History entries are keyed by gradient step for cross-algorithm
 comparability.
+
+Client participation & compute heterogeneity (core/schedule.py): every
+round the loop draws a seeded ClientSchedule from `TrainConfig.schedule`
+(which clients participate, how many local steps each completes) and feeds
+it to the jitted round_fn. The default config is all-clients/full-budget —
+trajectory-identical to scheduling-free rounds. When the config is
+heterogeneous, the capability profile is also handed to the algorithm via
+HParams.capability (ParallelSFL clusters similar-capability clients).
+
+The round driver is jitted with donate_argnums=(0,) where the backend
+supports donation, so state buffers are reused across rounds instead of
+reallocated (see core.algorithms.jit_round_fn).
 """
 from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-from repro.core.algorithms import HParams, get_algorithm, num_rounds
+from repro.core.algorithms import HParams, get_algorithm, jit_round_fn, num_rounds
+from repro.core.schedule import (
+    ScheduleConfig,
+    capability_profile,
+    full_schedule,
+    round_schedule,
+)
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.optim.per_component import ComponentLR
@@ -33,8 +51,8 @@ class TrainConfig:
     algorithm: str = "mtsl"
     lr: float = 0.1  # used by round-based algorithms (mtsl uses `optimizer`)
     local_steps: int = 1  # local steps per round for round-based FL
-    log_every: int = 20  # in rounds
-    eval_every: int = 0  # in rounds
+    log_every: int = 20  # in rounds; 0 = log only the first/last round
+    eval_every: int = 0  # in rounds; 0 disables eval
     checkpoint_path: Optional[str] = None
     checkpoint_every: int = 0  # in rounds
     microbatches: int = 1
@@ -42,6 +60,9 @@ class TrainConfig:
     prox_mu: float = 0.01  # fedprox proximal strength
     momentum: float = 0.9  # smofi server-side momentum
     num_clusters: int = 2  # parallelsfl cluster count
+    # client participation / straggler simulation; the default is the
+    # classic full synchronous round (see core/schedule.py)
+    schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
 
 
 def train(
@@ -58,12 +79,17 @@ def train(
 
     `batches` must yield round batches `[M, steps_per_round * b, ...]`
     (for single-step algorithms that is the ordinary per-step batch).
+    History entries carry the round's participant count under
+    "participants".
     """
     alg = get_algorithm(tcfg.algorithm)
+    scfg = tcfg.schedule or ScheduleConfig()
+    cap = capability_profile(num_clients, scfg)
     hp = HParams(lr=tcfg.lr, local_steps=tcfg.local_steps,
                  optimizer=optimizer, component_lr=component_lr,
                  microbatches=tcfg.microbatches, prox_mu=tcfg.prox_mu,
-                 momentum=tcfg.momentum, num_clusters=tcfg.num_clusters)
+                 momentum=tcfg.momentum, num_clusters=tcfg.num_clusters,
+                 capability=None if scfg.is_trivial else tuple(cap))
     spr = alg.steps_per_round(hp)
     rounds = num_rounds(tcfg.steps, spr)
     if rounds * spr != tcfg.steps:
@@ -72,12 +98,14 @@ def train(
 
     rng = jax.random.PRNGKey(tcfg.seed)
     state = alg.init_state(model, rng, num_clients, hp)
-    round_fn = jax.jit(alg.round_fn(model, num_clients, hp))
+    round_fn = jit_round_fn(alg, model, num_clients, hp)
     eval_fn = jax.jit(alg.eval_fn(model, num_clients)) if eval_batches else None
     # ONE cycling iterator for the whole run: a list of eval batches is
     # rotated through (not stuck on its first element), and a generator is
     # consumed once then replayed instead of being drained mid-run.
     eval_iter = itertools.cycle(eval_batches) if eval_fn is not None else None
+    # trivial configs reuse one constant schedule (no per-round allocation)
+    trivial_sched = full_schedule(num_clients, spr) if scfg.is_trivial else None
 
     history = []
     t0 = time.time()
@@ -85,9 +113,14 @@ def train(
     for i, batch in enumerate(batches):
         if i >= rounds:
             break
-        state, metrics = round_fn(state, batch)
+        sched = (trivial_sched if trivial_sched is not None
+                 else round_schedule(scfg, num_clients, spr, i, cap))
+        state, metrics = round_fn(state, batch, sched)
         rounds_done = i + 1
-        do_log = (i + 1) % tcfg.log_every == 0 or i == 0 or i == rounds - 1
+        # log_every=0 disables the periodic cadence (first/last still log),
+        # mirroring eval_every=0 — and never divides by zero
+        do_log = ((tcfg.log_every and (i + 1) % tcfg.log_every == 0)
+                  or i == 0 or i == rounds - 1)
         # eval runs on its OWN cadence — never gated behind the log cadence —
         # and its history entry is recorded unconditionally
         do_eval = (eval_fn is not None and tcfg.eval_every
@@ -95,7 +128,8 @@ def train(
         if do_log or do_eval:
             m = {k: np.asarray(v) for k, v in metrics.items()}
             entry = {"step": (i + 1) * spr, "round": i + 1,
-                     "loss": float(m["loss"]), "time": time.time() - t0}
+                     "loss": float(m["loss"]), "time": time.time() - t0,
+                     "participants": sched.num_participants}
             if do_eval:
                 ev = eval_fn(state, next(eval_iter))
                 entry["acc_mtl"] = float(ev.get("acc_mtl", float("nan")))

@@ -1,0 +1,33 @@
+"""Persistent jit-compilation cache switch, shared by the test suite
+(tests/conftest.py), the benchmark harness (benchmarks/common.py,
+benchmarks/run.py), and anything else that retraces the seven algorithms:
+compile each program once per cache directory, not once per process.
+
+CI restores the directory between runs (actions/cache keyed on the jax
+install) and points JAX_COMPILATION_CACHE_DIR at it.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def enable_compilation_cache(path: str | None = None) -> str | None:
+    """Turn on JAX's persistent compilation cache.
+
+    Reads JAX_COMPILATION_CACHE_DIR when `path` is None; returns the
+    directory in use, or None when disabled/unsupported. Safe to call
+    repeatedly."""
+    path = path or os.environ.get("JAX_COMPILATION_CACHE_DIR")
+    if not path:
+        return None
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        # cache every trace, however small/fast — wall time here is
+        # dominated by many short compiles, which the defaults would skip
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except AttributeError:  # older jax without these knobs
+        return None
+    return path

@@ -5,6 +5,14 @@ import jax
 import numpy as np
 import pytest
 
+from repro.utils.jit_cache import enable_compilation_cache
+
+# Persistent jit-compile cache (CI sets JAX_COMPILATION_CACHE_DIR and
+# restores the directory between runs): the suite traces the same seven
+# algorithms over and over — compile each program once per cache, not once
+# per run. No-op when the env var is unset.
+enable_compilation_cache()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -189,7 +189,7 @@ def _register_toy():
     def toy_round(model, num_clients, hp):
         loss_fn = federation.full_model_loss(model)
 
-        def round_fn(state, batch):
+        def round_fn(state, batch, schedule=None):  # new (state,batch,schedule)
             mbs = split_local_steps(batch, hp.local_steps)
 
             def client_run(tp, sp, cb):
