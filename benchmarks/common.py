@@ -33,6 +33,7 @@ from repro.core.schedule import (
     ScheduleConfig,
     capability_profile,
     full_schedule,
+    padded_batch_per_client,
     round_schedule,
 )
 from repro.data.pipeline import client_batches
@@ -123,17 +124,23 @@ def run_algorithm(
         hp = hp.with_updates(capability=tuple(cap))
     spr = alg.steps_per_round(hp)
     rounds = num_rounds(steps, spr)
-    per_round_batch = batch_per_client * spr
+    # capability batching pads the generated rows (fast clients' headroom);
+    # the nominal batch_per_client still sets the per-step round total
+    per_round_batch = padded_batch_per_client(scfg, batch_per_client) * spr
 
     state = alg.init_state(model, rng0, M, hp)
     round_fn = jit_round_fn(alg, model, M, hp)
     eval_fn = jax.jit(alg.eval_fn(model, M))
     trivial_sched = full_schedule(M, spr) if scfg.is_trivial else None
 
-    def _round_bytes(P):
+    def _round_bytes(P, samples_per_step=None):
+        kw = {}
+        if samples_per_step is not None:
+            # bytes follow the samples ACTUALLY transmitted per local step
+            kw["samples_per_step"] = samples_per_step
         return alg.round_bytes(cfg, M, batch_per_client, hp,
                                tower_params=tower_p, total_params=total_p,
-                               num_participants=P)
+                               num_participants=P, **kw)
 
     # trivial schedules cost the same every round — compute it once
     full_round_bytes = _round_bytes(M) if trivial_sched is not None else None
@@ -147,13 +154,13 @@ def run_algorithm(
         client_batches(src, per_round_batch, steps=rounds, seed=seed)
     ):
         sched = (trivial_sched if trivial_sched is not None
-                 else round_schedule(scfg, M, spr, i, cap))
+                 else round_schedule(scfg, M, spr, i, cap, batch_per_client))
         state, metrics = round_fn(state, batch, sched)
         P = M if trivial_sched is not None else sched.num_participants
         participants.append(P)
         # bytes scale with THIS round's participants, not M
         cum_bytes += (full_round_bytes if full_round_bytes is not None
-                      else _round_bytes(P))
+                      else _round_bytes(P, sched.samples_per_step))
         loss_curve.append(float(metrics["loss"]))
         if (i + 1) % eval_every == 0 or i == rounds - 1:
             acc = float(eval_fn(state, tb)["acc_mtl"])

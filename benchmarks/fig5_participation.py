@@ -19,19 +19,24 @@ Claims checked:
     loss, accuracy above chance).
 
     PYTHONPATH=src python -m benchmarks.fig5_participation   # toy scale
+    PYTHONPATH=src python -m benchmarks.fig5_participation --json fig5.json
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 from benchmarks.common import ALGS, run_algorithm
 from repro.core.schedule import ScheduleConfig
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_path: str | None = None):
     rates = (1.0, 0.5) if quick else (1.0, 0.75, 0.5, 0.25)
     fracs = (0.0, 0.5) if quick else (0.0, 0.25, 0.5)
     steps = 60 if quick else 800
     ls = 4 if quick else 20
     rows = []
+    cells = []
     results = {}
     for alg in ALGS:
         for rate in rates:
@@ -48,6 +53,14 @@ def run(quick: bool = False):
                     f"acc={r.acc_mtl:.3f} MB={r.total_bytes / 1e6:.3f} "
                     f"avg_participants={r.mean_participants:.1f}",
                 ))
+                cells.append({
+                    "algorithm": alg,
+                    "participation_rate": rate,
+                    "straggler_frac": frac,
+                    "acc_mtl": float(r.acc_mtl),
+                    "total_bytes": int(r.total_bytes),
+                    "mean_participants": float(r.mean_participants),
+                })
     # claim 1: per-round bytes scale with participants for every algorithm
     scales = all(
         results[(alg, 0.5, 0.0)].total_bytes
@@ -61,12 +74,34 @@ def run(quick: bool = False):
     worst = results[("mtsl", rates[-1], fracs[-1])]
     rows.append(("fig5/claim_mtsl_trains_under_straggle", 0.0,
                  "PASS" if worst.acc_mtl > 0.2 else "FAIL"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({
+                "benchmark": "fig5_participation",
+                "quick": quick,
+                "steps": steps,
+                "local_steps": ls,
+                "cells": cells,
+                "claims": {
+                    "bytes_scale_with_participation": bool(scales),
+                    "mtsl_trains_under_straggle": bool(worst.acc_mtl > 0.2),
+                },
+            }, f, indent=1)
+        print(f"wrote {json_path}")
     return rows
 
 
-if __name__ == "__main__":
+def main(argv=None):
     from benchmarks.common import enable_compilation_cache
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
     enable_compilation_cache()
-    for r in run(quick=True):
+    for r in run(quick=not args.full, json_path=args.json):
         print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

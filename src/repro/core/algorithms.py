@@ -130,8 +130,11 @@ class Algorithm:
       steps_per_round(hp) -> gradient steps one round advances.
       round_bytes(cfg, num_clients, batch_per_client, hp,
                   tower_params=..., total_params=...,
-                  num_participants=...) -> bytes per round; per-client
-          traffic scales with the round's participants, not M.
+                  num_participants=..., samples_per_step=...) -> bytes per
+          round; per-client traffic scales with the round's participants,
+          not M, and smashed-activation traffic with the samples actually
+          transmitted per local step (capability-aware batch sizing;
+          None = participants x batch_per_client).
       state_to_tree / state_from_tree: (de)serialization hooks for
           checkpointing; default identity (msgpack handles NamedTuples).
       serve_params(state) -> {"towers","server"} params for ServeEngine,
@@ -240,9 +243,11 @@ def _mtsl_round(model, num_clients, hp: HParams):
     def round_fn(state, batch, schedule=None):
         # one split step per round: the budget is moot, but the per-task
         # loss sum is masked so only participants' towers (and their server
-        # contributions) receive gradient
+        # contributions) receive gradient; capability batch sizes limit
+        # each client to its first sizes[m] samples of the padded row
         mask = None if schedule is None else schedule.mask
-        return step(state, batch, clr, mask)
+        sizes = None if schedule is None else schedule.sizes
+        return step(state, batch, clr, mask, sizes)
 
     return round_fn
 
@@ -257,9 +262,11 @@ def _mtsl_eval(model, num_clients):
 
 
 def _mtsl_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                total_params=None, num_participants=None):
+                total_params=None, num_participants=None,
+                samples_per_step=None):
     return comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client,
-                                num_participants=num_participants).total
+                                num_participants=num_participants,
+                                samples_per_step=samples_per_step).total
 
 
 register_algorithm(Algorithm(
@@ -309,11 +316,13 @@ def _shared_state_eval(model, num_clients):
 
 
 def _splitfed_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                    total_params=None, num_participants=None):
+                    total_params=None, num_participants=None,
+                    samples_per_step=None):
     # k split steps' smashed traffic + one tower-federation exchange
     smashed = comm_cost.round_cost(
         "mtsl", cfg, num_clients, batch_per_client,
-        num_participants=num_participants).total * hp.local_steps
+        num_participants=num_participants,
+        samples_per_step=samples_per_step).total * hp.local_steps
     fed = comm_cost.round_cost(
         "splitfed", cfg, num_clients, batch_per_client,
         tower_params=tower_params,
@@ -355,7 +364,9 @@ def _fedavg_round(model, num_clients, hp: HParams):
 
 
 def _fedavg_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                  total_params=None, num_participants=None):
+                  total_params=None, num_participants=None,
+                  samples_per_step=None):
+    # full-model exchange only: traffic is independent of the samples sent
     return comm_cost.round_cost(
         "fedavg", cfg, num_clients, batch_per_client,
         total_params=total_params, num_participants=num_participants).total
@@ -409,7 +420,9 @@ def _fedem_eval(model, num_clients):
 
 
 def _fedem_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                 total_params=None, num_participants=None):
+                 total_params=None, num_participants=None,
+                 samples_per_step=None):
+    # component exchange only: traffic is independent of the samples sent
     return comm_cost.round_cost(
         "fedem", cfg, num_clients, batch_per_client, total_params=total_params,
         num_components=hp.num_components,
@@ -445,7 +458,9 @@ def _fedprox_round(model, num_clients, hp: HParams):
 
 
 def _fedprox_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                   total_params=None, num_participants=None):
+                   total_params=None, num_participants=None,
+                   samples_per_step=None):
+    # full-model exchange only: traffic is independent of the samples sent
     return comm_cost.round_cost(
         "fedprox", cfg, num_clients, batch_per_client,
         total_params=total_params, num_participants=num_participants).total
@@ -506,7 +521,7 @@ def _parallelsfl_from_tree(tree):
 
 def _parallelsfl_bytes(cfg, num_clients, batch_per_client, hp, *,
                        tower_params=None, total_params=None,
-                       num_participants=None):
+                       num_participants=None, samples_per_step=None):
     server_params = None
     if tower_params is not None and total_params is not None:
         server_params = total_params - tower_params
@@ -514,7 +529,8 @@ def _parallelsfl_bytes(cfg, num_clients, batch_per_client, hp, *,
         "parallelsfl", cfg, num_clients, batch_per_client,
         tower_params=tower_params, server_params=server_params,
         local_steps=hp.local_steps, num_clusters=hp.num_clusters,
-        num_participants=num_participants).total
+        num_participants=num_participants,
+        samples_per_step=samples_per_step).total
 
 
 register_algorithm(Algorithm(
@@ -559,11 +575,13 @@ def _smofi_round(model, num_clients, hp: HParams):
 
 
 def _smofi_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                 total_params=None, num_participants=None):
+                 total_params=None, num_participants=None,
+                 samples_per_step=None):
     return comm_cost.round_cost(
         "smofi", cfg, num_clients, batch_per_client,
         tower_params=tower_params, local_steps=hp.local_steps,
-        num_participants=num_participants).total
+        num_participants=num_participants,
+        samples_per_step=samples_per_step).total
 
 
 register_algorithm(Algorithm(

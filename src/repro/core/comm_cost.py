@@ -81,6 +81,7 @@ def round_cost(
     server_params: int | None = None,
     num_clusters: int = 2,
     num_participants: int | None = None,
+    samples_per_step: int | None = None,
 ) -> RoundCost:
     """Bytes per training round for one of {mtsl, splitfed, fedavg, fedprox,
     fedem, smofi, parallelsfl}.
@@ -96,17 +97,30 @@ def round_cost(
     per-cluster edge entities that sync every round regardless of which
     clients were sampled. Straggler budgets are not modeled here: a
     participant is billed its full round (an upper bound on smashed
-    traffic)."""
+    traffic).
+
+    `samples_per_step` (capability-aware batch sizing, core/schedule.py)
+    overrides the per-step smashed-sample count: the split-learning upload/
+    download is billed for the samples ACTUALLY transmitted across all
+    participants (`int(schedule.sizes.sum())`) instead of the nominal
+    `num_participants * batch_per_client`. Parameter-federation traffic
+    (tower/model exchanges) is unaffected — those bytes do not depend on
+    batch size."""
     M = num_clients
     P = M if num_participants is None else max(1, min(num_participants, M))
-    s = _smashed_elems(cfg, batch_per_client, seq_len) * bytes_per_elem
-    labels = batch_per_client * max(seq_len, 1) * label_bytes
+    # smashed traffic is exactly linear in the sample count: bill per sample
+    s1 = _smashed_elems(cfg, 1, seq_len) * bytes_per_elem
+    lab1 = max(seq_len, 1) * label_bytes
+    S = (P * batch_per_client if samples_per_step is None
+         else max(int(samples_per_step), 0))
+    smash_up = S * (s1 + lab1)
+    smash_down = S * s1
     if algorithm == "mtsl":
-        return RoundCost(up_bytes=P * (s + labels), down_bytes=P * s)
+        return RoundCost(up_bytes=smash_up, down_bytes=smash_down)
     if algorithm == "splitfed":
         assert tower_params is not None
         fed = P * tower_params * bytes_per_elem
-        return RoundCost(up_bytes=P * (s + labels) + fed, down_bytes=P * s + fed)
+        return RoundCost(up_bytes=smash_up + fed, down_bytes=smash_down + fed)
     if algorithm in ("fedavg", "fedprox"):
         assert total_params is not None
         fed = P * total_params * bytes_per_elem
@@ -120,14 +134,14 @@ def round_cost(
         # so momentum fusion is free on the edge) + one tower federation
         assert tower_params is not None
         fed = P * tower_params * bytes_per_elem
-        return RoundCost(up_bytes=local_steps * P * (s + labels) + fed,
-                         down_bytes=local_steps * P * s + fed)
+        return RoundCost(up_bytes=local_steps * smash_up + fed,
+                         down_bytes=local_steps * smash_down + fed)
     if algorithm == "parallelsfl":
         # k split steps + within-cluster tower federation + merging the C
         # cluster server replicas across the backbone
         assert tower_params is not None and server_params is not None
         C = max(1, min(num_clusters, M))
         fed = P * tower_params * bytes_per_elem + C * server_params * bytes_per_elem
-        return RoundCost(up_bytes=local_steps * P * (s + labels) + fed,
-                         down_bytes=local_steps * P * s + fed)
+        return RoundCost(up_bytes=local_steps * smash_up + fed,
+                         down_bytes=local_steps * smash_down + fed)
     raise ValueError(algorithm)

@@ -46,6 +46,7 @@ from repro.core.schedule import (
     full_schedule,
     participation_bcast_mean,
     participation_mean,
+    schedule_sample_mask,
     step_activity,
 )
 from repro.models.registry import Model
@@ -55,6 +56,17 @@ from repro.utils.sharding import Annotated, axes_of, strip
 PyTree = Any
 
 ALGORITHMS = ("mtsl", "splitfed", "fedavg")
+
+
+def _vmap_with_smask(fn, *args, in_axes=0):
+    """vmap `fn(*args, smask_row)` over clients; the last arg is the
+    optional [M, b] sample mask. When it is None, fn is vmapped WITHOUT the
+    mask argument so the trace stays bit-identical to the pre-sizing round
+    builders (the parity goldens pin this)."""
+    if args[-1] is None:
+        axes = in_axes if isinstance(in_axes, int) else tuple(in_axes[:-1])
+        return jax.vmap(lambda *a: fn(*a, None), in_axes=axes)(*args[:-1])
+    return jax.vmap(fn, in_axes=in_axes)(*args)
 
 
 def sync_transform(algorithm: str, num_clients: int) -> Callable[[PyTree], PyTree]:
@@ -98,11 +110,17 @@ def full_model_loss(model: Model):
     """Per-client full-model loss (tower∘server composition, no client axis).
 
     Shared by the round-based FL baselines; also handy for custom
-    algorithms registered via core/algorithms.py."""
+    algorithms registered via core/algorithms.py.
+
+    `smask` (optional [b] {0,1}) selects the live samples of a PADDED local
+    batch — capability-aware batch sizing (core/schedule.py) hands client m
+    only its first sizes[m] samples; the loss is then the mean over live
+    samples only, so pad samples contribute neither loss nor gradient.
+    None (or all-ones) is bit-identical to the plain mean."""
     cfg = model.cfg
     is_classifier = cfg.family in ("mlp", "resnet")
 
-    def loss_fn(params_c, mb):
+    def loss_fn(params_c, mb, smask=None):
         """One client's full model on one local batch (no client axis)."""
         inputs = {k: v for k, v in mb.items() if k != "label"}
         smashed = model.tower_forward(params_c["tower"], inputs)
@@ -112,11 +130,18 @@ def full_model_loss(model: Model):
             labels = mb["label"]
             logz = jax.nn.logsumexp(logits, axis=-1)
             gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-            return jnp.mean(logz - gold) + aux
-        tokens = mb["tokens"]
-        logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
-        gold = jnp.take_along_axis(logits[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
-        return jnp.mean(logz - gold) + aux
+            nll = logz - gold  # [b]
+        else:
+            tokens = mb["tokens"]
+            logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+            gold = jnp.take_along_axis(
+                logits[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+            nll = logz - gold  # [b, S-1]
+        if smask is None:  # bit-identical to the pre-sizing reduction
+            return jnp.mean(nll) + aux
+        w = smask.reshape(smask.shape + (1,) * (nll.ndim - 1))
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(
+            jnp.broadcast_to(w, nll.shape)), 1.0) + aux
 
     return loss_fn
 
@@ -137,7 +162,9 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
     clients between rounds). batch: [M, local_steps, b, ...]. With a
     schedule, a client stops stepping after budget[m] local steps and the
     round-end average runs over participants only (non-participants still
-    download the new global model).
+    download the new global model). With `schedule.sizes` (capability-aware
+    batch sizing), client m's loss/gradient each step use only the first
+    sizes[m] samples of its padded local batch.
     """
     loss_fn = full_model_loss(model)
 
@@ -145,15 +172,17 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
         if schedule is None:
             schedule = full_schedule(num_clients, local_steps)
         steps_t = jnp.arange(local_steps)
+        smask = schedule_sample_mask(schedule, batch)
 
-        def client_run(tp, sp, client_batch, budget):
+        def client_run(tp, sp, client_batch, budget, sm):
             anchor = {"tower": tp, "server": sp}
 
             def one_step(carry, xs):
                 mb, t = xs
                 pc = carry
                 active = t < budget  # straggler: budget steps, then hold
-                loss, grads = jax.value_and_grad(lambda p: loss_fn(p, mb))(pc)
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, mb, sm))(pc)
                 if mu:
                     grads = jax.tree.map(
                         lambda g, p, a: g + mu * (p - a).astype(g.dtype),
@@ -168,8 +197,9 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
             # per-client loss over the steps it actually ran
             return pc, jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
 
-        pcs, losses = jax.vmap(client_run)(
-            params["towers"], params["servers"], batch, schedule.budget)
+        pcs, losses = _vmap_with_smask(
+            client_run, params["towers"], params["servers"], batch,
+            schedule.budget, smask)
         # federation: average over participants, broadcast back to everyone
         avg = jax.tree.map(
             lambda x: participation_bcast_mean(x, schedule.mask), pcs)
@@ -196,7 +226,8 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
     fed-averaged. params: {"towers": [M,...], "server": ...}. With a
     schedule, an inactive client (not sampled, or past its straggler budget)
     contributes zero gradient to the server and its tower holds; the tower
-    federation averages over participants only."""
+    federation averages over participants only. With `schedule.sizes`, each
+    client's per-step loss runs over its first sizes[m] samples only."""
     cfg = model.cfg
     M = num_clients
     from repro.core.mtsl import make_loss_fn
@@ -207,12 +238,13 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
         if schedule is None:
             schedule = full_schedule(M, local_steps)
         act = step_activity(schedule.mask, schedule.budget, local_steps)
+        smask = schedule_sample_mask(schedule, batch)
 
         def one_step(carry, xs):
             mb, a = xs
             p = carry
             (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(p, mb, a)
+                loss_fn, has_aux=True)(p, mb, a, smask)
             p = jax.tree.map(lambda q, g: q - lr * g.astype(q.dtype), p, grads)
             return p, metrics["per_task"]
 
@@ -279,7 +311,8 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
     eval, and checkpoints always agree.
     batch: [M, local_steps, b, ...]. With a schedule, cluster means weight
     active members only; a cluster whose members are all inactive holds its
-    replica and towers for the round.
+    replica and towers for the round. With `schedule.sizes`, each client's
+    per-step gradient runs over its first sizes[m] samples only.
     """
     loss_fn = full_model_loss(model)
 
@@ -289,6 +322,7 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
         cidx = params["cidx"]
         C = jax.tree.leaves(params["servers"])[0].shape[0]
         act = step_activity(schedule.mask, schedule.budget, local_steps)
+        smask = schedule_sample_mask(schedule, batch)
 
         def _cluster_wmean(x, w):
             """[M, ...] values, [M] weights -> [C, ...] weighted means
@@ -305,11 +339,12 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
             towers, servers = carry
             servers_pc = jax.tree.map(lambda s: s[cidx], servers)  # [M, ...]
 
-            def client_grad(tp, sp, mbm):
+            def client_grad(tp, sp, mbm, sm):
                 return jax.value_and_grad(
-                    lambda p: loss_fn(p, mbm))({"tower": tp, "server": sp})
+                    lambda p: loss_fn(p, mbm, sm))({"tower": tp, "server": sp})
 
-            losses, grads = jax.vmap(client_grad)(towers, servers_pc, mb)
+            losses, grads = _vmap_with_smask(
+                client_grad, towers, servers_pc, mb, smask)
             towers = jax.tree.map(
                 lambda p, g: p - lr * (g * broadcast_weights(a, g)).astype(p.dtype),
                 towers, grads["tower"])
@@ -391,7 +426,9 @@ def build_smofi_round(model: Model, lr: float, num_clients: int,
     batch: [M, local_steps, b, ...]. With a schedule, the fused buffer
     accumulates the mean over ACTIVE clients' server gradients (a step with
     no active client holds both server and buffer), inactive towers hold,
-    and the round-end tower federation averages over participants.
+    and the round-end tower federation averages over participants. With
+    `schedule.sizes`, each client's per-step gradient runs over its first
+    sizes[m] samples only.
     """
     loss_fn = full_model_loss(model)
 
@@ -399,18 +436,20 @@ def build_smofi_round(model: Model, lr: float, num_clients: int,
         if schedule is None:
             schedule = full_schedule(num_clients, local_steps)
         act = step_activity(schedule.mask, schedule.budget, local_steps)
+        smask = schedule_sample_mask(schedule, batch)
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
 
         def one_step(carry, xs):
             mb, a = xs
             towers, server, smom = carry
 
-            def client_grad(tp, sv, mbm):
+            def client_grad(tp, sv, mbm, sm):
                 return jax.value_and_grad(
-                    lambda p: loss_fn(p, mbm))({"tower": tp, "server": sv})
+                    lambda p: loss_fn(p, mbm, sm))({"tower": tp, "server": sv})
 
-            losses, grads = jax.vmap(client_grad, in_axes=(0, None, 0))(
-                towers, server, mb)
+            losses, grads = _vmap_with_smask(
+                client_grad, towers, server, mb, smask,
+                in_axes=(0, None, 0, 0))
             towers = jax.tree.map(
                 lambda p, g: p - lr * (g * broadcast_weights(a, g)).astype(p.dtype),
                 towers, grads["tower"])
@@ -482,31 +521,34 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
     batch: [M, local_steps, b, ...]. With a schedule, components average
     over participants only, a straggler's local updates stop at its budget
     (responsibilities average over the steps it ran), and non-participants'
-    responsibilities pi[m] are FROZEN for the round.
+    responsibilities pi[m] are FROZEN for the round. With `schedule.sizes`,
+    a client's E- and M-steps run over its first sizes[m] samples only.
     """
     loss_fn = full_model_loss(model)
     K = num_components
 
-    def per_sample_losses(comps, mb):
+    def per_sample_losses(comps, mb, sm):
         # comps: [K, ...]; mb: one client's local batch (no client axis)
-        return jax.vmap(lambda c: loss_fn(c, mb))(comps)  # [K] (batch-mean)
+        return jax.vmap(lambda c: loss_fn(c, mb, sm))(comps)  # [K] (batch-mean)
 
     def round_fn(components, pi, batch,
                  schedule: Optional[ClientSchedule] = None):
         if schedule is None:
             schedule = full_schedule(pi.shape[0], local_steps)
         steps_t = jnp.arange(local_steps)
+        smask = schedule_sample_mask(schedule, batch)
 
-        def client_run(pi_m, client_batch, budget):
+        def client_run(pi_m, client_batch, budget, sm):
             def one_step(comps, xs):
                 mb, t = xs
                 active = t < budget
-                l = per_sample_losses(comps, mb)  # [K]
+                l = per_sample_losses(comps, mb, sm)  # [K]
                 r = jax.nn.softmax(jnp.log(pi_m + 1e-12) - l)  # [K]
                 r = jax.lax.stop_gradient(r)
 
                 def wloss(cs):
-                    return jnp.sum(r * jax.vmap(lambda c: loss_fn(c, mb))(cs))
+                    return jnp.sum(
+                        r * jax.vmap(lambda c: loss_fn(c, mb, sm))(cs))
 
                 grads = jax.grad(wloss)(comps)
                 stepped = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
@@ -521,8 +563,8 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
             r_mean = jnp.sum(rs * act[:, None], 0) / jnp.maximum(jnp.sum(act), 1.0)
             return comps, r_mean
 
-        comps_per_client, r_mean = jax.vmap(client_run)(
-            pi, batch, schedule.budget)
+        comps_per_client, r_mean = _vmap_with_smask(
+            client_run, pi, batch, schedule.budget, smask)
         new_components = jax.tree.map(
             lambda x: participation_mean(x, schedule.mask), comps_per_client)
         r_norm = r_mean / jnp.sum(r_mean, axis=-1, keepdims=True)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import federation
+from repro.core import schedule as schedule_mod
 from repro.core.split import is_client_path, stack_towers, replicate_tower
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -43,27 +44,35 @@ class TrainState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _ce_logits(logits, labels, mask=None):
-    """Mean cross-entropy; logits [..., V] f32, labels int. mask optional."""
+def _ce_logits(logits, labels, mask=None, denom=None):
+    """Mean cross-entropy; logits [..., V] f32, labels int. `mask`
+    optionally selects live samples; `denom` overrides the masked mean's
+    denominator (gradient accumulation splits one live-sample mean across
+    microbatches — each slice contributes its masked SUM over the caller's
+    shared denominator so the accumulated total is the true mean)."""
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     nll = logz - gold
     if mask is not None:
-        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        d = jnp.maximum(jnp.sum(mask), 1.0) if denom is None else denom
+        return jnp.sum(nll * mask) / d
     return jnp.mean(nll)
 
 
-def _lm_loss(logits, tokens):
-    """Next-token CE. logits/tokens: [..., S(,V)]."""
-    return _ce_logits(
-        logits[..., :-1, :],
-        tokens[..., 1:],
-        mask=jnp.ones(tokens[..., 1:].shape, jnp.float32),
-    )
+def _lm_loss(logits, tokens, smask=None, denom=None):
+    """Next-token CE. logits/tokens: [..., S(,V)]. `smask` [b] optionally
+    selects the live sequences of a padded batch (capability batch sizing);
+    `denom` is the _ce_logits denominator override in TOKENS."""
+    mask = jnp.ones(tokens[..., 1:].shape, jnp.float32)
+    if smask is not None:
+        mask = mask * smask.reshape(smask.shape + (1,) * (mask.ndim - smask.ndim))
+    return _ce_logits(logits[..., :-1, :], tokens[..., 1:], mask=mask,
+                      denom=denom)
 
 
 def make_loss_fn(model: Model, num_clients: int) -> Callable:
-    """loss_fn(params, batch, participation=None) -> (loss, metrics).
+    """loss_fn(params, batch, participation=None, sample_mask=None)
+    -> (loss, metrics).
 
     batch entries carry a leading client axis [M, b, ...]:
       LM: {"tokens"} (+"vis" | +"frames"); classifiers: {"image","label"}.
@@ -79,12 +88,24 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
     would need a per-client aux decomposition from server_forward. Exact
     for classifier families (aux = 0, the paper's experiments). All-ones
     is bit-identical to no mask.
+
+    `sample_mask` (optional [M, b] {0,1}) is capability-aware batch sizing
+    (core/schedule.py): client m's per-task loss becomes the mean over its
+    first sizes[m] samples of a padded batch row — pad samples contribute
+    neither loss nor task gradient (the MoE-aux caveat above applies to pad
+    samples the same way it applies to non-participants). `sample_denom`
+    (optional [M] floats) overrides the per-client masked-mean denominator
+    — gradient accumulation passes each microbatch `live_samples[m] /
+    microbatches` so the uniformly-averaged accumulation equals the
+    whole-batch live-sample mean regardless of how the live prefix falls
+    across microbatch slices.
     """
     cfg = model.cfg
     M = num_clients
     is_classifier = cfg.family in ("mlp", "resnet")
 
-    def loss_fn(params, batch, participation=None):
+    def loss_fn(params, batch, participation=None, sample_mask=None,
+                sample_denom=None):
         inputs = {k: v for k, v in batch.items() if k != "label"}
         smashed = jax.vmap(model.tower_forward)(params["towers"], inputs)
         if participation is not None:
@@ -105,23 +126,46 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
         if is_classifier:
             labels = batch["label"].reshape(-1)
             logits32 = logits.astype(jnp.float32)
-            per = jax.vmap(_ce_logits)(
-                logits32.reshape(M, -1, logits.shape[-1]),
-                batch["label"],
-            )  # [M] per-task mean loss
-            acc = jnp.mean(
-                (jnp.argmax(logits32, -1) == labels).astype(jnp.float32)
-            )
+            per_logits = logits32.reshape(M, -1, logits.shape[-1])
+            if sample_mask is None:
+                per = jax.vmap(_ce_logits)(per_logits, batch["label"])
+                acc = jnp.mean(
+                    (jnp.argmax(logits32, -1) == labels).astype(jnp.float32)
+                )
+            else:
+                if sample_denom is None:
+                    per = jax.vmap(_ce_logits)(
+                        per_logits, batch["label"],
+                        sample_mask)  # [M] live-sample mean
+                else:
+                    # epsilon (not 1) guard: a size-0 client's numerator is
+                    # exactly 0, and clamping to 1 would phantom-count it
+                    # in the accumulated acc denominator
+                    per = jax.vmap(_ce_logits)(
+                        per_logits, batch["label"], sample_mask,
+                        jnp.maximum(sample_denom, 1e-9))
+                correct = (jnp.argmax(logits32, -1) == labels).astype(
+                    jnp.float32)
+                w = sample_mask.reshape(-1)
+                acc_denom = (jnp.maximum(jnp.sum(w), 1.0)
+                             if sample_denom is None
+                             else jnp.maximum(jnp.sum(sample_denom), 1e-9))
+                acc = jnp.sum(correct * w) / acc_denom
             wper = per if participation is None else per * participation
             loss = jnp.sum(wper) + aux
             return loss, {"loss": loss, "per_task": per, "acc": acc, "aux": aux}
         tokens = batch["tokens"].reshape((-1,) + batch["tokens"].shape[2:])
-        per = jax.vmap(_lm_loss)(
-            logits.astype(jnp.float32).reshape(
-                (M, -1) + logits.shape[1:]
-            ),
-            batch["tokens"],
-        )
+        per_logits = logits.astype(jnp.float32).reshape(
+            (M, -1) + logits.shape[1:])
+        if sample_mask is None:
+            per = jax.vmap(_lm_loss)(per_logits, batch["tokens"])
+        elif sample_denom is None:
+            per = jax.vmap(_lm_loss)(per_logits, batch["tokens"], sample_mask)
+        else:
+            seq_tokens = batch["tokens"].shape[-1] - 1
+            per = jax.vmap(_lm_loss)(
+                per_logits, batch["tokens"], sample_mask,
+                jnp.maximum(sample_denom * seq_tokens, 1e-9))
         wper = per if participation is None else per * participation
         loss = jnp.sum(wper) + aux
         return loss, {"loss": loss, "per_task": per, "aux": aux}
@@ -158,47 +202,71 @@ def build_train_step(
     algorithm: str = "mtsl",
     microbatches: int = 1,
 ) -> Callable:
-    """Returns train_step(state, batch, component_lr=None, participation=None)
-    -> (state, metrics). `participation` is an optional [M] {0,1} mask:
-    masked-out clients' towers get zero gradient and the server aggregates
-    participants only (see make_loss_fn); None/all-ones is the full round."""
+    """Returns train_step(state, batch, component_lr=None, participation=None,
+    sample_sizes=None) -> (state, metrics). `participation` is an optional
+    [M] {0,1} mask: masked-out clients' towers get zero gradient and the
+    server aggregates participants only (see make_loss_fn); None/all-ones is
+    the full round. `sample_sizes` ([M] int32, capability-aware batch
+    sizing) limits client m's contribution to the first sample_sizes[m]
+    samples of its (padded) batch row; under gradient accumulation the
+    per-row sample mask is sliced along with the batch and every microbatch
+    divides by the SHARED live-sample count (live[m]/microbatches), so the
+    uniformly-averaged accumulation equals the whole-batch live-sample mean
+    no matter how a client's live prefix falls across the slices."""
     loss_fn = make_loss_fn(model, num_clients)
     opt = per_component_lr(base_optimizer, is_client_path)
     sync = federation.sync_transform(algorithm, num_clients)
 
-    def _grads(params, batch, participation=None):
+    def _grads(params, batch, participation=None, smask=None, sdenom=None):
         return jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch, participation)
+            params, batch, participation, smask, sdenom)
 
     def train_step(state: TrainState, batch,
                    component_lr: Optional[ComponentLR] = None,
-                   participation=None):
+                   participation=None, sample_sizes=None):
+        width = jax.tree.leaves(batch)[0].shape[1]
+        smask = (None if sample_sizes is None
+                 else schedule_mod.sample_mask(sample_sizes, width))
         if microbatches > 1:
             mbs = jax.tree.map(
                 lambda x: x.reshape((x.shape[0], microbatches, -1) + x.shape[2:]).swapaxes(0, 1),
                 batch,
             )
+            sm_mbs = (None if smask is None else
+                      smask.reshape((smask.shape[0], microbatches, -1))
+                      .swapaxes(0, 1))  # [mb, M, b/mb]: sliced like the batch
+            # shared denominator per slice: the whole row's live count over
+            # microbatches (constant across slices — see docstring).
+            # Deliberately UNclamped: a masked-out client (sizes=0) must
+            # contribute zero to the acc denominator too; make_loss_fn
+            # guards the division with an epsilon
+            sdenom = (None if sample_sizes is None else
+                      sample_sizes.astype(jnp.float32) / microbatches)
 
-            def body(carry, mb):
-                (loss, metrics), grads = _grads(state.params, mb, participation)
+            def body(carry, xs):
+                mb, sm = xs if sm_mbs is not None else (xs, None)
+                (loss, metrics), grads = _grads(state.params, mb,
+                                                participation, sm, sdenom)
                 acc_loss, acc_metrics, acc_grads = carry
                 acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
                 acc_metrics = jax.tree.map(jnp.add, acc_metrics, metrics)
                 return (acc_loss + loss, acc_metrics, acc_grads), None
 
-            zero_g = jax.tree.map(jnp.zeros_like, state.params)
             (loss0, metrics0), g0 = _grads(
-                state.params, jax.tree.map(lambda x: x[0], mbs), participation
+                state.params, jax.tree.map(lambda x: x[0], mbs), participation,
+                None if sm_mbs is None else sm_mbs[0], sdenom
             )
             rest = jax.tree.map(lambda x: x[1:], mbs)
             (loss, metrics, grads), _ = jax.lax.scan(
-                body, (loss0, metrics0, g0), rest
+                body, (loss0, metrics0, g0),
+                rest if sm_mbs is None else (rest, sm_mbs[1:])
             )
             inv = 1.0 / microbatches
             grads = jax.tree.map(lambda g: g * inv, grads)
             metrics = jax.tree.map(lambda m: m * inv, metrics)
         else:
-            (loss, metrics), grads = _grads(state.params, batch, participation)
+            (loss, metrics), grads = _grads(state.params, batch, participation,
+                                            smask)
 
         grads = sync(grads)
         updates, opt_state = opt.update(

@@ -22,6 +22,21 @@ the Algorithm registry (core/algorithms.py):
                    profile to group similar-capability clients
                    (heterogeneity-aware ParallelSFL clustering).
 
+Capability-aware LOCAL batch sizing (`ScheduleConfig(capability_batching=
+True)`) turns compute heterogeneity into throughput instead of idle time:
+rather than dropping a straggler's tail local steps (the budget mechanism),
+every participant runs the FULL round but on a per-step microbatch sized
+proportionally to its compute speed — slow clients get smaller batches,
+fast clients pick up the slack, and the round's TOTAL sample count is
+conserved (`capability_batch_sizes`, largest-remainder apportionment with
+waterfilled caps). The per-round sizes ride on the schedule as
+`ClientSchedule.sizes` ([M] int32; masked clients get exactly 0, every
+participant gets >= 1) and the round builders apply them as a per-sample
+mask over a padded round batch (`padded_batch_per_client` rows per client;
+`sample_mask` builds the [M, b_pad] mask inside the jitted round).
+`core.comm_cost.round_cost(..., samples_per_step=int(sizes.sum()))` then
+bills smashed-activation traffic by the samples actually transmitted.
+
 The default all-clients / full-budget schedule (`full_schedule`, or any
 trivial ScheduleConfig) is trace- and trajectory-identical to scheduling-
 free rounds: masks of ones multiply through reductions unchanged and
@@ -33,6 +48,7 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Iterator, NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,14 +66,46 @@ class ClientSchedule(NamedTuple):
     budget: [M] int32 in [1, local_steps]; local steps the client completes
             before dropping out of the round (straggler simulation).
             Algorithms with a single step per round (mtsl) ignore it.
+    sizes:  optional [M] int32 per-step microbatch sizes (capability-aware
+            local batch sizing): client m consumes the first sizes[m]
+            samples of each padded local-step batch. None (the default)
+            means every client uses its whole batch row. Masked clients
+            carry 0; participants carry >= 1; the per-step total is
+            conserved across the round (see capability_batch_sizes).
     """
 
     mask: jnp.ndarray
     budget: jnp.ndarray
+    sizes: Optional[jnp.ndarray] = None
 
     @property
     def num_participants(self) -> int:
         return int(np.asarray(self.mask).sum())
+
+    @property
+    def samples_per_step(self) -> Optional[int]:
+        """Total samples transmitted per local step (None when unsized)."""
+        return None if self.sizes is None else int(np.asarray(self.sizes).sum())
+
+
+def sample_mask(sizes: jnp.ndarray, width: int) -> jnp.ndarray:
+    """[M] per-client sample counts -> [M, width] float32 {0,1} mask over a
+    padded batch row: client m's first sizes[m] samples are live. Jit-safe
+    (width is static, sizes is traced)."""
+    return (jnp.arange(width)[None, :] < sizes[:, None]).astype(jnp.float32)
+
+
+def schedule_sample_mask(schedule: "ClientSchedule", batch,
+                         axis: int = 2) -> Optional[jnp.ndarray]:
+    """The round's [M, b] live-sample mask, or None when the schedule
+    carries no capability batch sizes. `axis` is the per-sample axis of the
+    round batch's leaves ([M, local_steps, b, ...] round batches -> 2;
+    [M, b, ...] single-step batches -> 1). The single derivation point for
+    every round builder — the None case keeps the pre-sizing trace."""
+    if schedule.sizes is None:
+        return None
+    width = jax.tree.leaves(batch)[0].shape[axis]
+    return sample_mask(schedule.sizes, width)
 
 
 @dataclass(frozen=True)
@@ -78,12 +126,22 @@ class ScheduleConfig:
     straggler_frac: float = 0.0
     seed: int = 0
     min_capability: float = 0.25
+    # capability-aware LOCAL batch sizing: instead of dropping a straggler's
+    # tail local steps, give every participant its full step count but a
+    # per-step microbatch proportional to its compute speed (per-round
+    # total sample count conserved). Round batches are generated at
+    # `padded_batch_per_client` rows per client so fast clients have
+    # headroom up to `batch_boost` x the nominal per-step batch.
+    capability_batching: bool = False
+    batch_boost: float = 2.0
 
     @property
     def is_trivial(self) -> bool:
         """True iff every round is all-clients at full budget (the
-        pre-scheduling behavior, bit-for-bit)."""
-        return self.participation_rate >= 1.0 and self.straggler_frac <= 0.0
+        pre-scheduling behavior, bit-for-bit). Capability batching is never
+        trivial: it changes the round-batch layout (padded rows + sizes)."""
+        return (self.participation_rate >= 1.0 and self.straggler_frac <= 0.0
+                and not self.capability_batching)
 
     def with_updates(self, **kw) -> "ScheduleConfig":
         return replace(self, **kw)
@@ -120,12 +178,83 @@ def budgets_from_capability(capability, local_steps: int) -> np.ndarray:
     return np.maximum(b, 1).astype(np.int32)
 
 
+def padded_batch_per_client(scfg: ScheduleConfig, batch_per_client: int) -> int:
+    """Per-client per-step row width of generated round batches.
+
+    Under capability batching a fast client may be apportioned more than the
+    nominal `batch_per_client` samples per step (up to `batch_boost` x), so
+    batches are generated with padded rows; otherwise the nominal width."""
+    if not scfg.capability_batching:
+        return batch_per_client
+    return max(int(np.ceil(scfg.batch_boost * batch_per_client)), 1)
+
+
+def capability_batch_sizes(
+    mask,
+    capability,
+    per_step_total: int,
+    max_per_client: int,
+) -> np.ndarray:
+    """Apportion one local step's global sample budget among participants in
+    proportion to compute speed. Returns [M] int32 sizes with:
+
+      * masked-out clients get exactly 0 samples,
+      * every participant gets at least 1,
+      * no client exceeds `max_per_client` (the padded row width),
+      * the total is conserved: sum(sizes) == clip(per_step_total,
+        P, P * max_per_client) — exactly `per_step_total` whenever the
+        caps make that feasible.
+
+    Deterministic largest-remainder apportionment with waterfilling: excess
+    above a client's cap is re-apportioned among clients with headroom, and
+    sub-unit remainders go one-by-one to the largest fractional claims
+    (ties broken by client index)."""
+    mask = np.asarray(mask, np.float64) > 0
+    cap = np.asarray(capability, np.float64)
+    if cap.shape != mask.shape:
+        raise ValueError(f"capability shape {cap.shape} != mask {mask.shape}")
+    M = mask.size
+    sizes = np.zeros(M, np.int64)
+    P = int(mask.sum())
+    if P == 0:
+        return sizes.astype(np.int32)
+    max_per_client = max(int(max_per_client), 1)
+    total = int(np.clip(int(per_step_total), P, P * max_per_client))
+    sizes[mask] = 1  # every participant processes something
+    remaining = total - P
+    cap = np.where(mask, np.maximum(cap, 1e-9), 0.0)
+    while remaining > 0:
+        head = np.where(mask, max_per_client - sizes, 0)
+        w = np.where(head > 0, cap, 0.0)
+        ws = w.sum()
+        if ws <= 0:
+            break  # everyone at cap (total was clipped, so only via races)
+        ideal = remaining * w / ws
+        add = np.minimum(np.floor(ideal).astype(np.int64), head)
+        granted = int(add.sum())
+        if granted == 0:
+            # sub-unit remainders: hand out singles by largest claim
+            order = np.lexsort((np.arange(M), -ideal))
+            for idx in order:
+                if remaining == 0:
+                    break
+                if head[idx] > 0:
+                    sizes[idx] += 1
+                    head[idx] -= 1
+                    remaining -= 1
+            continue
+        sizes += add
+        remaining -= granted
+    return sizes.astype(np.int32)
+
+
 def round_schedule(
     scfg: ScheduleConfig,
     num_clients: int,
     local_steps: int,
     round_idx: int,
     capability: Optional[np.ndarray] = None,
+    batch_per_client: Optional[int] = None,
 ) -> ClientSchedule:
     """The seeded schedule for round `round_idx`.
 
@@ -133,6 +262,14 @@ def round_schedule(
     (independent rounds, reproducible stream); at least one client always
     participates. Budgets come from the fixed capability profile. A trivial
     config short-circuits to `full_schedule`.
+
+    With `scfg.capability_batching`, pass the nominal `batch_per_client` b:
+    straggling moves from the step axis to the sample axis — every
+    participant keeps the FULL local-step budget and instead receives a
+    per-step microbatch `sizes[m]` proportional to its capability
+    (conserving the synchronous per-step total M*b; see
+    capability_batch_sizes). Round batches must then be generated at
+    `padded_batch_per_client(scfg, b)` rows per client.
     """
     if scfg.is_trivial:
         return full_schedule(num_clients, local_steps)
@@ -145,20 +282,44 @@ def round_schedule(
         mask = rng.random(num_clients) < scfg.participation_rate
         if not mask.any():
             mask[rng.integers(num_clients)] = True
+    sizes = None
+    if scfg.capability_batching:
+        if batch_per_client is None:
+            raise ValueError(
+                "capability_batching needs the nominal batch_per_client to "
+                "apportion per-step sample budgets")
+        sizes = jnp.asarray(capability_batch_sizes(
+            mask, capability,
+            per_step_total=num_clients * batch_per_client,
+            max_per_client=padded_batch_per_client(scfg, batch_per_client)))
+        # stragglers are equalized through batch size, not dropped steps
+        budget = np.full((num_clients,), max(local_steps, 1), np.int64)
+    else:
+        budget = budgets_from_capability(capability, local_steps)
     return ClientSchedule(
         mask=jnp.asarray(mask, jnp.float32),
-        budget=jnp.asarray(budgets_from_capability(capability, local_steps)),
+        budget=jnp.asarray(budget, jnp.int32),
+        sizes=sizes,
     )
 
 
 def schedule_stream(
-    scfg: ScheduleConfig, num_clients: int, local_steps: int
+    scfg: ScheduleConfig,
+    num_clients: int,
+    local_steps: int,
+    batch_per_client: Optional[int] = None,
+    start_round: int = 0,
 ) -> Iterator[ClientSchedule]:
-    """Infinite per-round schedule stream (capability drawn once)."""
+    """Infinite per-round schedule stream (capability drawn once).
+
+    `start_round` resumes the seeded stream mid-run (checkpoint restart):
+    round i of the resumed stream equals round `start_round + i` of the
+    original."""
     cap = capability_profile(num_clients, scfg)
-    i = 0
+    i = start_round
     while True:
-        yield round_schedule(scfg, num_clients, local_steps, i, cap)
+        yield round_schedule(scfg, num_clients, local_steps, i, cap,
+                             batch_per_client)
         i += 1
 
 

@@ -3,6 +3,12 @@
 `client_batches` yields training batches with the [M, b, ...] client-leading
 layout the MTSL step expects. On a mesh, pass `sharding` to place the client
 axis onto ("pod","data") without a host-side gather.
+
+With `as_numpy=True` the generator stays entirely host-side (numpy arrays,
+no device transfer) — that is what the async round pipeline
+(train/pipeline.py) wants: batch synthesis runs on a background thread and
+the consumer stages the arrays with `jax.device_put` one round before they
+are needed. Values are identical either way.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ def client_batches(
     steps: Optional[int] = None,
     seed: int = 0,
     sharding=None,
+    as_numpy: bool = False,
 ) -> Iterator[dict]:
     """Yield batches from a MultiTaskImageSource or MultiTaskLMSource."""
     rng = np.random.default_rng(seed)
@@ -29,10 +36,12 @@ def client_batches(
     while steps is None or i < steps:
         if is_lm:
             toks = source.all_clients_batch(rng, batch_per_client, seq_len)
-            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+            batch = {"tokens": np.asarray(toks, np.int32)}
         else:
             x, y = source.all_tasks_batch(rng, batch_per_client)
-            batch = {"image": jnp.asarray(x), "label": jnp.asarray(y, jnp.int32)}
+            batch = {"image": np.asarray(x), "label": np.asarray(y, np.int32)}
+        if not as_numpy:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
         if sharding is not None:
             batch = jax.tree.map(lambda a: jax.device_put(a, sharding), batch)
         yield batch

@@ -28,7 +28,7 @@ from repro.core.algorithms import (
     list_algorithms,
     num_rounds,
 )
-from repro.core.schedule import ScheduleConfig
+from repro.core.schedule import ScheduleConfig, padded_batch_per_client
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
@@ -60,6 +60,22 @@ def main(argv=None):
     ap.add_argument("--schedule-seed", type=int, default=None,
                     help="seed for the participation/straggler stream "
                          "(default: --seed)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="async round pipeline depth (train/pipeline.py): "
+                         "schedules/batches for this many rounds are drawn "
+                         "on a background thread and staged on device while "
+                         "the current round runs, and metrics materialize "
+                         "lazily. 0 = fully synchronous (trajectory is "
+                         "identical either way)")
+    ap.add_argument("--capability-batching", action="store_true",
+                    help="capability-aware LOCAL batch sizing: slow clients "
+                         "get proportionally smaller per-step microbatches "
+                         "(per-round total sample count conserved) instead "
+                         "of dropping local steps; see core/schedule.py")
+    ap.add_argument("--batch-boost", type=float, default=2.0,
+                    help="padded-row headroom for capability batching: fast "
+                         "clients may receive up to boost x "
+                         "--batch-per-client samples per step")
     ap.add_argument("--batch-per-client", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--alpha", type=float, default=0.0, help="heterogeneity")
@@ -87,10 +103,21 @@ def main(argv=None):
         print(f"note: {args.algorithm!r} runs the papers' plain local SGD at "
               f"--lr; --optimizer {opt_name} is ignored")
 
+    scfg = ScheduleConfig(
+        participation_rate=args.participation_rate,
+        straggler_frac=args.straggler_frac,
+        seed=args.seed if args.schedule_seed is None else args.schedule_seed,
+        capability_batching=args.capability_batching,
+        batch_boost=args.batch_boost)
+
     spr = alg.steps_per_round(HParams(local_steps=args.local_steps))
     rounds = num_rounds(args.steps, spr)
-    per_round_batch = args.batch_per_client * spr
+    # capability batching pads the generated rows so fast clients have
+    # headroom; the nominal per-step batch still sets the round total
+    per_round_batch = padded_batch_per_client(scfg, args.batch_per_client) * spr
 
+    # as_numpy: batch synthesis stays host-side so the async pipeline's
+    # background thread owns it; the pipeline stages arrays on device
     if is_classifier:
         src = MultiTaskImageSource(
             num_classes=M, image_size=cfg.image_size,
@@ -98,20 +125,18 @@ def main(argv=None):
             noise_sigma=args.noise_sigma, seed=args.seed,
         )
         batches = client_batches(src, per_round_batch,
-                                 steps=rounds, seed=args.seed)
+                                 steps=rounds, seed=args.seed,
+                                 as_numpy=args.prefetch > 0)
     else:
         src = MultiTaskLMSource(vocab_size=cfg.vocab_size, num_clients=M,
                                 beta=1.0 - args.alpha, seed=args.seed)
         batches = client_batches(src, per_round_batch,
                                  seq_len=args.seq_len, steps=rounds,
-                                 seed=args.seed)
+                                 seed=args.seed,
+                                 as_numpy=args.prefetch > 0)
 
     # round-based algorithms ignore component_lr; mtsl applies it (Eq. 9)
     clr = lr_policy.server_scaled(M, args.server_lr_scale)
-    scfg = ScheduleConfig(
-        participation_rate=args.participation_rate,
-        straggler_frac=args.straggler_frac,
-        seed=args.seed if args.schedule_seed is None else args.schedule_seed)
     tcfg = TrainConfig(steps=args.steps, algorithm=args.algorithm,
                        lr=args.lr, local_steps=args.local_steps,
                        checkpoint_path=args.checkpoint,
@@ -119,7 +144,9 @@ def main(argv=None):
                        seed=args.seed, prox_mu=args.prox_mu,
                        momentum=args.momentum,
                        num_clusters=args.num_clusters,
-                       schedule=scfg)
+                       schedule=scfg,
+                       prefetch=args.prefetch,
+                       batch_per_client=args.batch_per_client)
     state, history = train(model, opt, batches, tcfg, M, component_lr=clr)
     print(f"final loss: {history[-1]['loss']:.4f}")
     return state, history

@@ -10,6 +10,27 @@ silently truncated; the effective step count is logged when it differs).
 History entries are keyed by gradient step for cross-algorithm
 comparability.
 
+Async round pipeline (train/pipeline.py). By default the loop runs
+`prefetch = TrainConfig.prefetch` (2) rounds ahead of the device on the
+host side:
+
+  * the seeded ClientSchedule stream and the round batches for rounds
+    i+1..i+prefetch are drawn/generated on a background thread while the
+    device runs round i, and the next round's arrays are staged with
+    `jax.device_put` (double buffering) before they are needed;
+  * metrics are NON-BLOCKING: at the log/eval cadence the loop pushes raw
+    device values into a small ring (depth = prefetch) and only
+    materializes them (`np.asarray`, the host<->device sync) when the ring
+    overflows or at end of run — so a `float(loss)` never stalls the
+    device mid-run. History order is always push order.
+
+Remaining sync points: checkpoint saves (`save_algorithm_state` calls
+`jax.device_get` on the state) and the final ring flush. Opt out with
+`prefetch=0` (`--prefetch 0` on the launcher): the loop then generates,
+transfers, and materializes synchronously. Any prefetch depth is
+trajectory-identical — the round math and its input order are unchanged
+(pinned by the parity suite in tests/test_pipeline.py).
+
 Client participation & compute heterogeneity (core/schedule.py): every
 round the loop draws a seeded ClientSchedule from `TrainConfig.schedule`
 (which clients participate, how many local steps each completes) and feeds
@@ -17,6 +38,18 @@ it to the jitted round_fn. The default config is all-clients/full-budget —
 trajectory-identical to scheduling-free rounds. When the config is
 heterogeneous, the capability profile is also handed to the algorithm via
 HParams.capability (ParallelSFL clusters similar-capability clients).
+With `ScheduleConfig.capability_batching` the schedule additionally
+carries per-client per-step microbatch sizes (slow clients get smaller
+batches, round total conserved); `TrainConfig.batch_per_client` must then
+be set to the nominal per-step batch so the loop can apportion sizes, and
+`batches` must yield padded rounds (`schedule.padded_batch_per_client`).
+
+Checkpoint/resume: pass `init_state=` (a state restored via
+`load_algorithm_state`) and `start_round=` (the checkpoint's "round"
+extra) to continue a run mid-stream — the schedule stream, step keys, and
+checkpoint cadence all resume at the absolute round index, so an
+interrupted run's trajectory matches an uninterrupted one (the caller must
+supply the REMAINING round batches).
 
 The round driver is jitted with donate_argnums=(0,) where the backend
 supports donation, so state buffers are reused across rounds instead of
@@ -30,19 +63,19 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.core.algorithms import HParams, get_algorithm, jit_round_fn, num_rounds
 from repro.core.schedule import (
     ScheduleConfig,
     capability_profile,
     full_schedule,
-    round_schedule,
+    schedule_stream,
 )
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.optim.per_component import ComponentLR
 from repro.train.checkpoint import save_algorithm_state
+from repro.train.pipeline import MetricsRing, pipeline_rounds
 
 
 @dataclass
@@ -63,6 +96,13 @@ class TrainConfig:
     # client participation / straggler simulation; the default is the
     # classic full synchronous round (see core/schedule.py)
     schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
+    # async round pipeline depth (train/pipeline.py): how many rounds of
+    # schedules/batches the host runs ahead, and how many logged rounds of
+    # metrics may stay un-materialized in flight. 0 = fully synchronous.
+    prefetch: int = 2
+    # nominal per-step batch per client; required when
+    # schedule.capability_batching is on (sizes are apportioned from it)
+    batch_per_client: Optional[int] = None
 
 
 def train(
@@ -74,16 +114,24 @@ def train(
     component_lr: Optional[ComponentLR] = None,
     eval_batches=None,
     log: Callable[[str], None] = print,
+    init_state=None,
+    start_round: int = 0,
 ):
     """Returns (final_state, history list of metric dicts).
 
     `batches` must yield round batches `[M, steps_per_round * b, ...]`
     (for single-step algorithms that is the ordinary per-step batch).
     History entries carry the round's participant count under
-    "participants".
+    "participants". `init_state`/`start_round` resume a checkpointed run
+    (see module docstring).
     """
     alg = get_algorithm(tcfg.algorithm)
     scfg = tcfg.schedule or ScheduleConfig()
+    if scfg.capability_batching and tcfg.batch_per_client is None:
+        raise ValueError(
+            "ScheduleConfig.capability_batching needs "
+            "TrainConfig.batch_per_client (the nominal per-step batch) to "
+            "apportion per-client microbatch sizes")
     cap = capability_profile(num_clients, scfg)
     hp = HParams(lr=tcfg.lr, local_steps=tcfg.local_steps,
                  optimizer=optimizer, component_lr=component_lr,
@@ -97,54 +145,82 @@ def train(
             f"x {spr} steps/round = {rounds * spr} effective gradient steps")
 
     rng = jax.random.PRNGKey(tcfg.seed)
-    state = alg.init_state(model, rng, num_clients, hp)
+    state = (alg.init_state(model, rng, num_clients, hp)
+             if init_state is None else init_state)
     round_fn = jit_round_fn(alg, model, num_clients, hp)
     eval_fn = jax.jit(alg.eval_fn(model, num_clients)) if eval_batches else None
     # ONE cycling iterator for the whole run: a list of eval batches is
     # rotated through (not stuck on its first element), and a generator is
-    # consumed once then replayed instead of being drained mid-run.
+    # consumed once then replayed instead of being drained mid-run. On
+    # resume, skip the evals the interrupted run already consumed so the
+    # stream position matches an uninterrupted run's.
     eval_iter = itertools.cycle(eval_batches) if eval_fn is not None else None
-    # trivial configs reuse one constant schedule (no per-round allocation)
-    trivial_sched = full_schedule(num_clients, spr) if scfg.is_trivial else None
+    if eval_iter is not None and start_round and tcfg.eval_every:
+        for _ in range(start_round // tcfg.eval_every):
+            next(eval_iter)
+
+    # the per-round schedule stream, resumable at start_round; trivial
+    # configs reuse one constant schedule (no per-round allocation)
+    if scfg.is_trivial:
+        sched_iter = itertools.repeat(full_schedule(num_clients, spr))
+    else:
+        sched_iter = schedule_stream(scfg, num_clients, spr,
+                                     tcfg.batch_per_client, start_round)
 
     history = []
     t0 = time.time()
-    rounds_done = ckpt_round = 0
-    for i, batch in enumerate(batches):
-        if i >= rounds:
-            break
-        sched = (trivial_sched if trivial_sched is not None
-                 else round_schedule(scfg, num_clients, spr, i, cap))
+
+    def _sink(p):
+        entry = {"step": p["step"], "round": p["round"],
+                 "loss": float(p["metrics"]["loss"]),
+                 "time": p["time"],
+                 "participants": p["participants"]}
+        if "eval" in p:
+            entry["acc_mtl"] = float(p["eval"].get("acc_mtl", float("nan")))
+        history.append(entry)
+        if p["do_log"]:
+            log(f"step {entry['step']:>6d}  loss {entry['loss']:.4f}"
+                + (f"  acc_mtl {entry['acc_mtl']:.3f}" if "acc_mtl" in entry else "")
+                + f"  ({entry['time']:.1f}s)")
+
+    ring = MetricsRing(tcfg.prefetch, _sink)
+    rounds_done = ckpt_round = start_round
+    remaining = max(rounds - start_round, 0)
+    for i, (batch, sched) in enumerate(
+            pipeline_rounds(batches, sched_iter, depth=tcfg.prefetch,
+                            num_rounds=remaining)):
+        r = start_round + i + 1  # absolute 1-based round index
         state, metrics = round_fn(state, batch, sched)
-        rounds_done = i + 1
+        rounds_done = r
         # log_every=0 disables the periodic cadence (first/last still log),
-        # mirroring eval_every=0 — and never divides by zero
-        do_log = ((tcfg.log_every and (i + 1) % tcfg.log_every == 0)
-                  or i == 0 or i == rounds - 1)
+        # mirroring eval_every=0 — and never divides by zero. The
+        # unconditional first-round log belongs to FRESH runs only: a
+        # resumed run must not record rounds an uninterrupted one would
+        # skip (resume == uninterrupted, entry for entry)
+        do_log = ((tcfg.log_every and r % tcfg.log_every == 0)
+                  or (i == 0 and start_round == 0) or r == rounds)
         # eval runs on its OWN cadence — never gated behind the log cadence —
         # and its history entry is recorded unconditionally
         do_eval = (eval_fn is not None and tcfg.eval_every
-                   and (i + 1) % tcfg.eval_every == 0)
+                   and r % tcfg.eval_every == 0)
         if do_log or do_eval:
-            m = {k: np.asarray(v) for k, v in metrics.items()}
-            entry = {"step": (i + 1) * spr, "round": i + 1,
-                     "loss": float(m["loss"]), "time": time.time() - t0,
-                     "participants": sched.num_participants}
+            # stamp the elapsed time NOW (when the round was dispatched) —
+            # the ring materializes entries up to `prefetch` rounds later
+            payload = {"metrics": metrics, "step": r * spr, "round": r,
+                       "participants": sched.num_participants,
+                       "time": time.time() - t0, "do_log": do_log}
             if do_eval:
-                ev = eval_fn(state, next(eval_iter))
-                entry["acc_mtl"] = float(ev.get("acc_mtl", float("nan")))
-            history.append(entry)
-            if do_log:
-                log(f"step {entry['step']:>6d}  loss {entry['loss']:.4f}"
-                    + (f"  acc_mtl {entry['acc_mtl']:.3f}" if "acc_mtl" in entry else "")
-                    + f"  ({entry['time']:.1f}s)")
-        if tcfg.checkpoint_path and tcfg.checkpoint_every and (i + 1) % tcfg.checkpoint_every == 0:
+                payload["eval"] = eval_fn(state, next(eval_iter))
+            ring.push(payload)
+        if tcfg.checkpoint_path and tcfg.checkpoint_every and r % tcfg.checkpoint_every == 0:
             save_algorithm_state(tcfg.checkpoint_path, alg, state,
-                                 extra={"step": (i + 1) * spr})
-            ckpt_round = i + 1
+                                 extra={"step": r * spr, "round": r})
+            ckpt_round = r
+    ring.flush()
     if tcfg.checkpoint_path and rounds_done > ckpt_round:
         # always leave a final checkpoint behind (unless the last round's
         # periodic save already wrote this exact state)
         save_algorithm_state(tcfg.checkpoint_path, alg, state,
-                             extra={"step": rounds_done * spr})
+                             extra={"step": rounds_done * spr,
+                                    "round": rounds_done})
     return state, history

@@ -1,0 +1,64 @@
+"""Benchmark smoke tests (slow): the participation sweep and the new
+sync-vs-pipelined throughput benchmark run end-to-end on tiny configs and
+emit well-formed JSON.
+
+These guard the benchmark ENTRY POINTS (arg parsing, JSON schema, claim
+wiring) — the numeric claims themselves are exercised at full scale by the
+benchmarks and pinned structurally here (types/ranges, not values, since
+CI wall-clock is noisy).
+"""
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import fig5_participation, throughput
+
+
+@pytest.mark.slow
+def test_fig5_participation_quick_end_to_end(tmp_path):
+    path = tmp_path / "fig5.json"
+    rows = fig5_participation.run(quick=True, json_path=str(path))
+    assert rows and all(len(r) == 3 for r in rows)
+    claims = [r for r in rows if "claim" in r[0]]
+    assert claims and all(r[2] == "PASS" for r in claims)
+
+    d = json.loads(path.read_text())
+    assert d["benchmark"] == "fig5_participation"
+    assert d["quick"] is True
+    # 7 algorithms x 2 rates x 2 fracs in quick mode
+    assert len(d["cells"]) == 28
+    for cell in d["cells"]:
+        assert set(cell) == {"algorithm", "participation_rate",
+                             "straggler_frac", "acc_mtl", "total_bytes",
+                             "mean_participants"}
+        assert 0.0 <= cell["acc_mtl"] <= 1.0
+        assert cell["total_bytes"] > 0
+        assert cell["mean_participants"] > 0
+    assert d["claims"]["bytes_scale_with_participation"] is True
+    assert d["claims"]["mtsl_trains_under_straggle"] is True
+
+
+@pytest.mark.slow
+def test_throughput_benchmark_quick_end_to_end(tmp_path):
+    path = tmp_path / "throughput.json"
+    out = throughput.run(quick=True, json_path=str(path))
+    d = json.loads(path.read_text())
+    assert d == json.loads(json.dumps(out))  # what we returned is what we wrote
+    assert d["benchmark"] == "throughput"
+    assert len(d["results"]) == 3
+    for r in d["results"]:
+        assert r["algorithm"] in ("mtsl", "fedavg")
+        # steady-state per-round times must be positive and sane
+        assert 0 < r["sync_ms_per_round"] < 10_000
+        assert 0 < r["pipelined_ms_per_round"] < 10_000
+        assert np.isfinite(r["speedup"]) and r["speedup"] > 0
+    # at least one straggler-heavy cell exists and the claim reflects it
+    straggle = [r for r in d["results"] if r["straggler_frac"] > 0]
+    assert straggle
+    assert d["claims"]["prefetch_wins"] == any(
+        r["speedup"] > 1.02 for r in straggle)

@@ -1,0 +1,395 @@
+"""Capability-aware local batch sizing (core/schedule.py) + sample-billed
+comm cost (core/comm_cost.py).
+
+  * Hypothesis properties for capability_batch_sizes: the per-round total
+    sample count is conserved (clipped only by the feasibility bounds
+    [P, P * max_per_client]), every participating client gets >= 1 sample,
+    masked clients get exactly 0, nobody exceeds the padded row, faster
+    participants never get fewer samples than slower ones, and the
+    apportionment is deterministic.
+  * comm_cost bills what was transmitted: with `samples_per_step` the
+    smashed-activation bytes equal the SUM over clients of their
+    actually-transmitted samples' bytes (exact linearity), while parameter
+    federation terms are untouched.
+  * End-to-end: uniform sizes reproduce the unsized round; samples beyond
+    a client's size (the pad) cannot influence the round at all; the train
+    loop and benchmark harness drive capability batching for every
+    registered algorithm.
+"""
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import make_source, run_algorithm
+from repro.configs import get_config
+from repro.core import comm_cost
+from repro.core.algorithms import HParams, get_algorithm
+from repro.core.schedule import (
+    ClientSchedule,
+    ScheduleConfig,
+    capability_batch_sizes,
+    capability_profile,
+    padded_batch_per_client,
+    round_schedule,
+    sample_mask,
+)
+from repro.data.pipeline import client_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.loop import TrainConfig, train
+
+
+# ---------------------------------------------------------------------------
+# apportionment properties
+# ---------------------------------------------------------------------------
+
+
+def test_capability_batch_sizes_properties():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 16),          # M
+           st.integers(1, 64),          # nominal batch b
+           st.floats(1.0, 4.0),         # boost
+           st.integers(0, 2**31 - 1))   # seed
+    def check(m, b, boost, seed):
+        rng = np.random.default_rng(seed)
+        mask = rng.random(m) < 0.6
+        if not mask.any():
+            mask[int(rng.integers(m))] = True
+        cap = np.where(rng.random(m) < 0.5,
+                       rng.uniform(0.05, 1.0, m), 1.0)
+        max_per = max(int(np.ceil(boost * b)), 1)
+        total = m * b
+        sizes = capability_batch_sizes(mask, cap, total, max_per)
+        P = int(mask.sum())
+        # masked clients get exactly 0; participants >= 1, <= padded row
+        assert (sizes[~mask] == 0).all()
+        assert (sizes[mask] >= 1).all()
+        assert (sizes <= max_per).all()
+        # conservation: exact whenever the caps make it feasible
+        assert sizes.sum() == int(np.clip(total, P, P * max_per))
+        # faster participants never get FEWER samples than slower ones
+        part = np.flatnonzero(mask)
+        for i in part:
+            for j in part:
+                if cap[i] > cap[j]:
+                    assert sizes[i] >= sizes[j], (cap, sizes)
+        # deterministic
+        again = capability_batch_sizes(mask, cap, total, max_per)
+        np.testing.assert_array_equal(sizes, again)
+
+    check()
+
+
+def test_capability_batch_sizes_properties_seeded_sweep():
+    """The same invariants as the hypothesis property, exercised over a
+    fixed seed sweep so they run even where hypothesis is not installed."""
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(1, 17))
+        b = int(rng.integers(1, 65))
+        max_per = max(int(np.ceil(rng.uniform(1.0, 4.0) * b)), 1)
+        mask = rng.random(m) < 0.6
+        if not mask.any():
+            mask[int(rng.integers(m))] = True
+        cap = np.where(rng.random(m) < 0.5, rng.uniform(0.05, 1.0, m), 1.0)
+        total = m * b
+        sizes = capability_batch_sizes(mask, cap, total, max_per)
+        P = int(mask.sum())
+        assert (sizes[~mask] == 0).all()
+        assert (sizes[mask] >= 1).all() and (sizes <= max_per).all()
+        assert sizes.sum() == int(np.clip(total, P, P * max_per))
+        part = np.flatnonzero(mask)
+        assert all(sizes[i] >= sizes[j] for i in part for j in part
+                   if cap[i] > cap[j]), (cap, sizes)
+
+
+def test_capability_batch_sizes_edge_cases():
+    # nobody participates -> all zero
+    np.testing.assert_array_equal(
+        capability_batch_sizes(np.zeros(4), np.ones(4), 16, 8), np.zeros(4))
+    # single participant takes the whole (capped) budget
+    mask = np.asarray([0, 1, 0, 0.0])
+    sizes = capability_batch_sizes(mask, np.ones(4), 16, 8)
+    assert sizes[1] == 8 and sizes.sum() == 8  # clipped at the padded row
+    # equal capabilities split evenly
+    sizes = capability_batch_sizes(np.ones(4), np.ones(4), 16, 8)
+    np.testing.assert_array_equal(sizes, [4, 4, 4, 4])
+    # shape mismatch rejected
+    with pytest.raises(ValueError, match="capability"):
+        capability_batch_sizes(np.ones(3), np.ones(4), 8, 4)
+
+
+def test_sample_mask_prefix():
+    m = np.asarray(sample_mask(jnp.asarray([0, 1, 3]), 3))
+    np.testing.assert_array_equal(m, [[0, 0, 0], [1, 0, 0], [1, 1, 1]])
+
+
+def test_round_schedule_capability_batching():
+    scfg = ScheduleConfig(participation_rate=0.6, straggler_frac=0.5, seed=3,
+                          capability_batching=True)
+    assert not scfg.is_trivial
+    M, b, k = 8, 4, 4
+    b_pad = padded_batch_per_client(scfg, b)
+    assert b_pad == 8  # default boost 2.0
+    cap = capability_profile(M, scfg)
+    for i in range(6):
+        s = round_schedule(scfg, M, k, i, cap, batch_per_client=b)
+        assert s.sizes is not None
+        sizes = np.asarray(s.sizes)
+        mask = np.asarray(s.mask)
+        P = int(mask.sum())
+        # conservation (clipped only by feasibility)
+        assert sizes.sum() == int(np.clip(M * b, P, P * b_pad))
+        assert s.samples_per_step == sizes.sum()
+        assert (sizes[mask == 0] == 0).all() and (sizes[mask > 0] >= 1).all()
+        # capability batching equalizes via batch size, not dropped steps
+        np.testing.assert_array_equal(np.asarray(s.budget), np.full(M, k))
+    with pytest.raises(ValueError, match="batch_per_client"):
+        round_schedule(scfg, M, k, 0, cap)
+
+
+# ---------------------------------------------------------------------------
+# comm cost bills actually-transmitted samples
+# ---------------------------------------------------------------------------
+
+
+def test_comm_cost_bytes_equal_sum_of_transmitted_activations():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    per_sample = comm_cost._smashed_elems(cfg, 1) * 4  # bytes_per_elem=4
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 32), min_size=4, max_size=4))
+    def check(sizes):
+        S = sum(sizes)
+        c = comm_cost.round_cost("mtsl", cfg, M, 16, samples_per_step=S)
+        # up = smashed + labels, down = smashed — exactly per transmitted
+        # sample (label_bytes=4, seq_len=1)
+        assert c.up_bytes == S * (per_sample + 4)
+        assert c.down_bytes == S * per_sample
+        # sum over clients of their own smashed traffic == the round bill
+        parts = [comm_cost.round_cost("mtsl", cfg, M, 16,
+                                      samples_per_step=s) for s in sizes]
+        assert sum(p.total for p in parts) == c.total
+
+    check()
+
+
+def test_comm_cost_bytes_linearity_seeded_sweep():
+    """Non-hypothesis counterpart of the linearity property above."""
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    per_sample = comm_cost._smashed_elems(cfg, 1) * 4
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        sizes = rng.integers(0, 33, size=M)
+        S = int(sizes.sum())
+        c = comm_cost.round_cost("mtsl", cfg, M, 16, samples_per_step=S)
+        assert c.up_bytes == S * (per_sample + 4)
+        assert c.down_bytes == S * per_sample
+        parts = [comm_cost.round_cost("mtsl", cfg, M, 16,
+                                      samples_per_step=int(s))
+                 for s in sizes]
+        assert sum(p.total for p in parts) == c.total
+
+
+def test_comm_cost_sample_billing_leaves_param_federation_alone():
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    kw = dict(tower_params=1000, server_params=4000, total_params=5000,
+              local_steps=4, num_participants=M)
+    for alg in ("smofi", "parallelsfl", "splitfed"):
+        c0 = comm_cost.round_cost(alg, cfg, M, 16, samples_per_step=0, **kw)
+        c1 = comm_cost.round_cost(alg, cfg, M, 16, samples_per_step=64, **kw)
+        # zero samples leaves exactly the parameter-federation floor
+        assert c0.total > 0
+        steps = kw["local_steps"] if alg in ("smofi", "parallelsfl") else 1
+        per_sample = comm_cost._smashed_elems(cfg, 1) * 4
+        assert c1.total - c0.total == steps * 64 * (2 * per_sample + 4)
+    # default (samples_per_step=None) is the nominal P * b — unchanged math
+    c_def = comm_cost.round_cost("mtsl", cfg, M, 16)
+    c_exp = comm_cost.round_cost("mtsl", cfg, M, 16,
+                                 samples_per_step=M * 16)
+    assert c_def.total == c_exp.total
+
+
+def test_algorithm_round_bytes_accept_samples_per_step():
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    hp = HParams(lr=0.1, local_steps=4)
+    kw = dict(tower_params=1000, total_params=5000)
+    for alg in ("mtsl", "splitfed", "smofi", "parallelsfl"):
+        a = get_algorithm(alg)
+        full = a.round_bytes(cfg, M, 16, hp, num_participants=M, **kw)
+        half = a.round_bytes(cfg, M, 16, hp, num_participants=M,
+                             samples_per_step=M * 8, **kw)
+        assert 0 < half < full
+    for alg in ("fedavg", "fedprox", "fedem"):  # param-only: unaffected
+        a = get_algorithm(alg)
+        full = a.round_bytes(cfg, M, 16, hp, num_participants=M, **kw)
+        half = a.round_bytes(cfg, M, 16, hp, num_participants=M,
+                             samples_per_step=M * 8, **kw)
+        assert half == full
+
+
+# ---------------------------------------------------------------------------
+# end-to-end round semantics
+# ---------------------------------------------------------------------------
+
+
+def _smoke_setup():
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    src = make_source(cfg, alpha=0.0, seed=0)
+    return cfg, model, src
+
+
+def _one_round(alg_name, batch, schedule, model, cfg, ls=4):
+    a = get_algorithm(alg_name)
+    hp = HParams(lr=0.1, local_steps=ls, optimizer=sgd(0.1))
+    state = a.init_state(model, jax.random.PRNGKey(0), cfg.num_clients, hp)
+    rf = jax.jit(a.round_fn(model, cfg.num_clients, hp))
+    return rf(state, batch, schedule)
+
+
+@pytest.mark.parametrize("alg", ["mtsl", "fedavg", "splitfed"])
+def test_uniform_sizes_match_unsized_round(alg):
+    """sizes == b for everyone on an unpadded batch is the plain round."""
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    ls = 1 if alg == "mtsl" else 4
+    b = 8
+    batch = next(iter(client_batches(src, b * ls, steps=1, seed=0)))
+    full = ClientSchedule(jnp.ones((M,), jnp.float32),
+                          jnp.full((M,), ls, jnp.int32))
+    sized = full._replace(sizes=jnp.full((M,), b, jnp.int32))
+    s_plain, m_plain = _one_round(alg, batch, full, model, cfg, ls)
+    s_sized, m_sized = _one_round(alg, batch, sized, model, cfg, ls)
+    jax.tree.map(
+        lambda a_, b_: np.testing.assert_allclose(
+            np.asarray(a_), np.asarray(b_), rtol=1e-6, atol=1e-7),
+        s_plain, s_sized)
+    np.testing.assert_allclose(float(m_plain["loss"]),
+                               float(m_sized["loss"]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("alg", ["mtsl", "fedavg", "splitfed", "smofi"])
+def test_pad_samples_cannot_influence_round(alg):
+    """Poisoning every sample BEYOND a client's size leaves the round's
+    output bit-identical — the pad really is dead weight."""
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    ls = 1 if alg == "mtsl" else 2
+    b_pad = 8
+    sizes = np.asarray([2, 5, 8, 1][:M], np.int32)
+    batch = next(iter(client_batches(src, b_pad * ls, steps=1, seed=0)))
+    sched = ClientSchedule(jnp.ones((M,), jnp.float32),
+                           jnp.full((M,), ls, jnp.int32),
+                           jnp.asarray(sizes))
+    poisoned = {k: np.asarray(v).copy() for k, v in batch.items()}
+    rng = np.random.default_rng(1)
+    # per client, garbage in every pad sample of every local step
+    for m in range(M):
+        row = poisoned["image"][m].reshape(ls, b_pad, *poisoned["image"].shape[2:])
+        row[:, sizes[m]:] = rng.normal(size=row[:, sizes[m]:].shape)
+        poisoned["label"][m] = poisoned["label"][m]  # labels of pads too:
+        lab = poisoned["label"][m].reshape(ls, b_pad)
+        lab[:, sizes[m]:] = rng.integers(0, cfg.num_clients,
+                                         size=lab[:, sizes[m]:].shape)
+    poisoned = {k: jnp.asarray(v) for k, v in poisoned.items()}
+    s1, m1 = _one_round(alg, batch, sched, model, cfg, ls)
+    s2, m2 = _one_round(alg, poisoned, sched, model, cfg, ls)
+    jax.tree.map(lambda a_, b_: np.testing.assert_array_equal(
+        np.asarray(a_), np.asarray(b_)), s1, s2)
+    np.testing.assert_array_equal(np.asarray(m1["loss"]),
+                                  np.asarray(m2["loss"]))
+
+
+def test_mtsl_gradient_accumulation_preserves_live_sample_mean():
+    """Capability batch sizing under microbatches: a client whose live
+    prefix spans only SOME microbatch slices must still get the whole-row
+    live-sample mean (every slice divides by the shared live count, not
+    its own) — the microbatched round matches the unmicrobatched one."""
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    b_pad = 8
+    # sizes chosen so live prefixes cross microbatch boundaries unevenly:
+    # with 4 slices of 2 samples, client with size 2 is live in slice 0
+    # only, size 5 in slices 0-2, size 8 in all; the last client is a
+    # NON-PARTICIPANT (mask 0, sizes 0) — it must not phantom-count in the
+    # accumulated acc denominator either
+    sizes = jnp.asarray([2, 5, 8, 0][:M], jnp.int32)
+    mask = jnp.asarray([1, 1, 1, 0][:M], jnp.float32)
+    sched = ClientSchedule(mask, jnp.ones((M,), jnp.int32), sizes)
+    batch = next(iter(client_batches(src, b_pad, steps=1, seed=0)))
+    a = get_algorithm("mtsl")
+    outs = {}
+    for mb in (1, 4):
+        hp = HParams(lr=0.1, local_steps=1, optimizer=sgd(0.1),
+                     microbatches=mb)
+        state = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+        rf = jax.jit(a.round_fn(model, M, hp))
+        outs[mb] = rf(state, batch, sched)
+    s1, m1 = outs[1]
+    s4, m4 = outs[4]
+    np.testing.assert_allclose(np.asarray(m1["per_task"]),
+                               np.asarray(m4["per_task"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    # acc agrees too: the denominator is the LIVE sample count in both
+    # paths (masked clients contribute no phantom samples)
+    np.testing.assert_allclose(float(m1["acc"]), float(m4["acc"]),
+                               rtol=1e-5)
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6),
+        s1.params, s4.params)
+
+
+@pytest.mark.parametrize("alg", ["mtsl", "fedavg", "fedem", "parallelsfl"])
+def test_capability_batching_trains_end_to_end(alg):
+    ls = 1 if alg == "mtsl" else 4
+    scfg = ScheduleConfig(participation_rate=0.75, straggler_frac=0.5,
+                          seed=3, capability_batching=True)
+    r = run_algorithm("paper-mlp", alg, alpha=0.0, steps=4 * ls, lr=0.1,
+                      batch_per_client=8, eval_every=2, seed=0, smoke=True,
+                      local_steps=ls, schedule=scfg)
+    assert np.isfinite(r.loss_curve).all()
+    assert 0.0 <= r.acc_mtl <= 1.0
+    assert r.total_bytes > 0
+
+
+def test_train_loop_capability_batching_requires_batch_size():
+    cfg, model, src = _smoke_setup()
+    scfg = ScheduleConfig(straggler_frac=0.5, capability_batching=True)
+    tcfg = TrainConfig(steps=2, algorithm="mtsl", schedule=scfg)
+    with pytest.raises(ValueError, match="batch_per_client"):
+        train(model, sgd(0.1), [], tcfg, cfg.num_clients, log=lambda s: None)
+
+
+def test_train_loop_drives_capability_batching():
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    scfg = ScheduleConfig(straggler_frac=0.5, seed=5,
+                          capability_batching=True)
+    b = 4
+    per_round = padded_batch_per_client(scfg, b)  # mtsl: spr=1
+    tcfg = TrainConfig(steps=4, algorithm="mtsl", lr=0.1, log_every=1,
+                       seed=0, schedule=scfg, prefetch=2, batch_per_client=b)
+    batches = client_batches(src, per_round, steps=4, seed=0, as_numpy=True)
+    _, history = train(model, sgd(0.1), batches, tcfg, M, log=lambda s: None)
+    assert len(history) == 4
+    assert all(np.isfinite(e["loss"]) for e in history)

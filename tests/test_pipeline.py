@@ -1,0 +1,338 @@
+"""Async round pipeline (train/pipeline.py + train/loop.py).
+
+  * Primitives: BackgroundIterator preserves order, relays exceptions at
+    the right position, and tears down; pipeline_rounds yields exactly
+    zip(batches, schedules) for ANY depth; MetricsRing defers
+    materialization but never reorders or drops entries.
+  * Parity goldens: the pipelined loop reproduces the synchronous
+    `train()` history (loss, step keys, participants) BIT-FOR-BIT for all
+    seven registered algorithms on the trivial schedule, and matches
+    seeded goldens under a heterogeneous ScheduleConfig.
+  * Checkpoint/resume mid-pipeline: save_algorithm_state -> reload ->
+    continue yields the same trajectory as an uninterrupted run (the
+    schedule stream, step keys, and state all resume at the absolute
+    round), for mtsl, fedavg, and parallelsfl (whose client->cluster map
+    lives in the state).
+"""
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import make_source
+from benchmarks.common import test_batches as _test_batches
+from repro.configs import get_config
+from repro.core.algorithms import HParams, get_algorithm
+from repro.core.schedule import ScheduleConfig
+from repro.data.pipeline import client_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.checkpoint import load_algorithm_state
+from repro.train.loop import TrainConfig, train
+from repro.train.pipeline import BackgroundIterator, MetricsRing, pipeline_rounds
+
+ALL_ALGS = ["mtsl", "splitfed", "fedavg", "fedem", "fedprox", "parallelsfl",
+            "smofi"]
+
+# Captured from the synchronous (prefetch=0) loop on paper-mlp smoke under
+# ScheduleConfig(participation_rate=0.6, straggler_frac=0.5, seed=11):
+# alpha=0, lr=0.1, batch_per_client=4, 4 rounds, seed=0. Pipelined runs at
+# ANY depth must reproduce these exactly (fedem's round keeps loss at 0.0
+# by design; its schedule stream is pinned by the participant counts).
+HET_SCHEDULE = ScheduleConfig(participation_rate=0.6, straggler_frac=0.5,
+                              seed=11)
+HET_GOLDEN = {
+    "mtsl": {"local_steps": 1,
+             "loss": [4.768429, 2.344188, 4.478669, 2.116194]},
+    "splitfed": {"local_steps": 2,
+                 "loss": [3.93844, 1.103199, 4.060003, 1.726961]},
+    "fedavg": {"local_steps": 2,
+               "loss": [4.772835, 1.659662, 7.137099, 2.357888]},
+    "fedem": {"local_steps": 2, "loss": [0.0, 0.0, 0.0, 0.0]},
+    "fedprox": {"local_steps": 2,
+                "loss": [4.772835, 1.659878, 7.134305, 2.357981]},
+    "parallelsfl": {"local_steps": 2,
+                    "loss": [3.883354, 1.262115, 4.115766, 2.111116]},
+    "smofi": {"local_steps": 2,
+              "loss": [4.301887, 0.782353, 4.887084, 1.982146]},
+}
+HET_PARTICIPANTS = [2, 1, 2, 1]
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_background_iterator_preserves_order():
+    for depth in (1, 2, 7):
+        assert list(BackgroundIterator(range(20), depth=depth)) == list(range(20))
+    assert list(BackgroundIterator([], depth=2)) == []
+
+
+def test_background_iterator_relays_exception_at_position():
+    def gen():
+        yield 1
+        yield 2
+        raise RuntimeError("source broke")
+
+    it = BackgroundIterator(gen(), depth=2)
+    assert next(it) == 1
+    assert next(it) == 2
+    with pytest.raises(RuntimeError, match="source broke"):
+        next(it)
+    # a closed iterator stays closed
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_background_iterator_close_unblocks_producer():
+    produced = []
+
+    def gen():
+        for i in range(1000):
+            produced.append(i)
+            yield i
+
+    it = BackgroundIterator(gen(), depth=2)
+    assert next(it) == 0
+    it.close()
+    it._thread.join(timeout=5)
+    assert not it._thread.is_alive()
+    assert len(produced) < 1000  # bounded queue really did apply backpressure
+
+
+@pytest.mark.parametrize("depth", [0, 1, 3])
+def test_pipeline_rounds_equals_zip(depth):
+    batches = [{"x": np.full((2, 2), i, np.float32)} for i in range(6)]
+    scheds = [f"s{i}" for i in range(10)]
+    got = list(pipeline_rounds(iter(batches), iter(scheds), depth=depth,
+                               num_rounds=5))
+    assert [s for _, s in got] == scheds[:5]
+    for (b, _), want in zip(got, batches):
+        np.testing.assert_array_equal(np.asarray(b["x"]), want["x"])
+
+
+def test_metrics_ring_defers_then_flushes_in_order():
+    out = []
+    ring = MetricsRing(2, out.append)
+    import jax.numpy as jnp
+
+    for i in range(5):
+        ring.push({"metrics": {"loss": jnp.asarray(float(i))}, "i": i})
+    # depth 2: pushes 0..4 materialize 0,1,2 eagerly-on-overflow, hold 3,4
+    assert [e["i"] for e in out] == [0, 1, 2]
+    assert len(ring) == 2
+    ring.flush()
+    assert [e["i"] for e in out] == [0, 1, 2, 3, 4]
+    assert all(isinstance(e["metrics"]["loss"], float) for e in out)
+    # depth 0 = synchronous: materialized on every push
+    out2 = []
+    ring0 = MetricsRing(0, out2.append)
+    ring0.push({"v": jnp.asarray(1.0)})
+    assert out2 and out2[0]["v"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# parity: pipelined == synchronous, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _smoke_setup():
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    src = make_source(cfg, alpha=0.0, seed=0)
+    return cfg, model, src
+
+
+def _run(alg, model, src, M, *, prefetch, schedule=None, rounds=4,
+         batch_per_client=4, eval_batches=None, eval_every=0, seed=0,
+         checkpoint_path=None, checkpoint_every=0, init_state=None,
+         start_round=0, total_rounds=None, as_numpy=True):
+    ls = 1 if alg == "mtsl" else 2
+    spr = get_algorithm(alg).steps_per_round(HParams(local_steps=ls))
+    total = total_rounds if total_rounds is not None else rounds
+    tcfg = TrainConfig(steps=total * spr, algorithm=alg, lr=0.1,
+                       local_steps=ls, log_every=1, eval_every=eval_every,
+                       seed=seed, schedule=schedule or ScheduleConfig(),
+                       prefetch=prefetch, batch_per_client=batch_per_client,
+                       checkpoint_path=checkpoint_path,
+                       checkpoint_every=checkpoint_every)
+    batches = client_batches(src, batch_per_client * spr,
+                             steps=rounds, seed=seed, as_numpy=as_numpy)
+    return train(model, sgd(0.1), batches, tcfg, M,
+                 eval_batches=eval_batches, log=lambda s: None,
+                 init_state=init_state, start_round=start_round)
+
+
+@pytest.mark.parametrize("alg", ALL_ALGS)
+def test_pipelined_matches_synchronous_bit_for_bit(alg):
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    _, h_sync = _run(alg, model, src, M, prefetch=0)
+    _, h_pipe = _run(alg, model, src, M, prefetch=3)
+    assert [e["loss"] for e in h_sync] == [e["loss"] for e in h_pipe]
+    for key in ("step", "round", "participants"):
+        assert [e[key] for e in h_sync] == [e[key] for e in h_pipe]
+
+
+@pytest.mark.parametrize("alg", ALL_ALGS)
+@pytest.mark.parametrize("prefetch", [0, 2])
+def test_heterogeneous_schedule_matches_seeded_golden(alg, prefetch):
+    g = HET_GOLDEN[alg]
+    cfg, model, src = _smoke_setup()
+    _, hist = _run(alg, model, src, cfg.num_clients, prefetch=prefetch,
+                   schedule=HET_SCHEDULE)
+    np.testing.assert_allclose([e["loss"] for e in hist], g["loss"],
+                               rtol=1e-5, atol=1e-5)
+    assert [e["participants"] for e in hist] == HET_PARTICIPANTS
+    spr = get_algorithm(alg).steps_per_round(
+        HParams(local_steps=g["local_steps"]))
+    assert [e["step"] for e in hist] == [spr * r for r in (1, 2, 3, 4)]
+
+
+def test_eval_entries_flow_through_ring_identically():
+    """Eval results ride the same non-blocking ring as train metrics: the
+    pipelined history's acc_mtl values equal the synchronous ones and land
+    on the eval cadence."""
+    cfg, model, src = _smoke_setup()
+    tb = _test_batches(cfg, src, per_task=16)
+    _, h_sync = _run("mtsl", model, src, cfg.num_clients, prefetch=0,
+                     rounds=6, eval_batches=[tb], eval_every=2)
+    _, h_pipe = _run("mtsl", model, src, cfg.num_clients, prefetch=2,
+                     rounds=6, eval_batches=[tb], eval_every=2)
+    sync_acc = [(e["round"], e["acc_mtl"]) for e in h_sync if "acc_mtl" in e]
+    pipe_acc = [(e["round"], e["acc_mtl"]) for e in h_pipe if "acc_mtl" in e]
+    assert sync_acc == pipe_acc
+    assert [r for r, _ in sync_acc] == [2, 4, 6]
+
+
+def test_prefetch_zero_and_legacy_jnp_batches_agree():
+    """as_numpy staging must not change values: host-side numpy batches
+    (pipeline path) and pre-transferred jnp batches (legacy path) produce
+    the identical trajectory."""
+    cfg, model, src = _smoke_setup()
+    _, h_np = _run("fedavg", model, src, cfg.num_clients, prefetch=2,
+                   as_numpy=True)
+    _, h_jnp = _run("fedavg", model, src, cfg.num_clients, prefetch=0,
+                    as_numpy=False)
+    assert [e["loss"] for e in h_np] == [e["loss"] for e in h_jnp]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume mid-pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", ["mtsl", "fedavg", "parallelsfl"])
+def test_checkpoint_resume_matches_uninterrupted(alg, tmp_path):
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    rounds = 6
+    # uninterrupted reference under a heterogeneous schedule (the seeded
+    # stream must resume at the right absolute round to reproduce it)
+    state_ref, h_ref = _run(alg, model, src, M, prefetch=2,
+                            schedule=HET_SCHEDULE, rounds=rounds)
+    # part 1: first 3 rounds, leaving a final checkpoint behind
+    path = str(tmp_path / f"{alg}.msgpack")
+    _, h_part1 = _run(alg, model, src, M, prefetch=2, schedule=HET_SCHEDULE,
+                      rounds=3, checkpoint_path=path)
+    restored, name, extra = load_algorithm_state(path, alg)
+    assert name == alg and extra["round"] == 3
+    # part 2: resume — same TOTAL budget, the REMAINING batches, and the
+    # absolute start round; the batch stream is seeded, so replaying it and
+    # skipping the consumed rounds reproduces rounds 4..6 exactly
+    ls = 1 if alg == "mtsl" else 2
+    spr = get_algorithm(alg).steps_per_round(HParams(local_steps=ls))
+    all_batches = list(client_batches(src, 4 * spr, steps=rounds, seed=0,
+                                      as_numpy=True))
+    tcfg = TrainConfig(steps=rounds * spr, algorithm=alg, lr=0.1,
+                       local_steps=ls, log_every=1, seed=0,
+                       schedule=HET_SCHEDULE, prefetch=2, batch_per_client=4)
+    state_res, h_part2 = train(model, sgd(0.1), iter(all_batches[3:]), tcfg,
+                               M, log=lambda s: None, init_state=restored,
+                               start_round=extra["round"])
+    resumed = h_part1 + h_part2
+    assert [e["loss"] for e in resumed] == [e["loss"] for e in h_ref]
+    assert [e["step"] for e in resumed] == [e["step"] for e in h_ref]
+    assert [e["round"] for e in resumed] == [e["round"] for e in h_ref]
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        state_res, state_ref)
+
+
+def test_resume_matches_uninterrupted_with_coprime_cadences(tmp_path):
+    """Resume parity must hold entry-for-entry when log/eval cadences do
+    not fire every round: the resumed run must not inject a first-round
+    log the uninterrupted run lacks, and its eval iterator must resume at
+    the uninterrupted run's stream position (two DISTINCT eval batches
+    expose any offset)."""
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    tb1 = _test_batches(cfg, src, per_task=8, seed=123)
+    tb2 = _test_batches(cfg, src, per_task=8, seed=321)
+    rounds, spr = 6, 2
+    all_batches = list(client_batches(src, 4 * spr, steps=rounds, seed=0,
+                                      as_numpy=True))
+
+    def cfg_for(steps_rounds, **kw):
+        return TrainConfig(steps=steps_rounds * spr, algorithm="fedavg",
+                           lr=0.1, local_steps=2, log_every=4, eval_every=2,
+                           seed=0, schedule=HET_SCHEDULE, prefetch=2,
+                           batch_per_client=4, **kw)
+
+    _, h_ref = train(model, sgd(0.1), iter(all_batches), cfg_for(rounds), M,
+                     eval_batches=[tb1, tb2], log=lambda s: None)
+    path = str(tmp_path / "ck.msgpack")
+    train(model, sgd(0.1), iter(all_batches[:3]),
+          cfg_for(3, checkpoint_path=path), M, eval_batches=[tb1, tb2],
+          log=lambda s: None)
+    restored, _, extra = load_algorithm_state(path, "fedavg")
+    _, h_tail = train(model, sgd(0.1), iter(all_batches[3:]),
+                      cfg_for(rounds), M, eval_batches=[tb1, tb2],
+                      log=lambda s: None, init_state=restored,
+                      start_round=extra["round"])
+    ref_tail = [e for e in h_ref if e["round"] > 3]
+    assert [e["round"] for e in h_tail] == [e["round"] for e in ref_tail]
+    assert [e["loss"] for e in h_tail] == [e["loss"] for e in ref_tail]
+    assert [e.get("acc_mtl") for e in h_tail] == \
+           [e.get("acc_mtl") for e in ref_tail]
+
+
+def test_history_time_is_monotonic_under_prefetch():
+    """Entry times are stamped when the round is dispatched, not when the
+    ring materializes them — so they are non-decreasing in round order."""
+    cfg, model, src = _smoke_setup()
+    _, hist = _run("mtsl", model, src, cfg.num_clients, prefetch=3, rounds=6)
+    times = [e["time"] for e in hist]
+    assert times == sorted(times)
+    assert all(t >= 0 for t in times)
+
+
+def test_resume_checkpoint_cadence_uses_absolute_rounds(tmp_path):
+    """A resumed run's periodic checkpoints land on the same absolute
+    rounds as an uninterrupted run's."""
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    path = str(tmp_path / "ck.msgpack")
+    _, _ = _run("fedavg", model, src, M, prefetch=0, rounds=3,
+                checkpoint_path=path)
+    restored, _, extra = load_algorithm_state(path, "fedavg")
+    spr = 2
+    all_batches = list(client_batches(src, 4 * spr, steps=6, seed=0,
+                                      as_numpy=True))
+    tcfg = TrainConfig(steps=6 * spr, algorithm="fedavg", lr=0.1,
+                       local_steps=2, log_every=1, seed=0, prefetch=2,
+                       checkpoint_path=path, checkpoint_every=2)
+    train(model, sgd(0.1), iter(all_batches[3:]), tcfg, M,
+          log=lambda s: None, init_state=restored,
+          start_round=extra["round"])
+    _, _, extra2 = load_algorithm_state(path, "fedavg")
+    # absolute rounds 4 and 6 hit the every-2 cadence; the final write is
+    # round 6 = gradient step 12
+    assert extra2 == {"step": 12, "round": 6}
