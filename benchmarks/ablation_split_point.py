@@ -10,12 +10,12 @@ We sweep split_layers on the paper MLP at alpha=0 and alpha=0.45.
 """
 from __future__ import annotations
 
-from benchmarks.common import run_algorithm
+from benchmarks.common import dump_rows_json, run_algorithm
 from repro.configs import get_config
 from repro.core import comm_cost
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_path: str | None = None):
     rows = []
     steps = 200 if quick else 400
     for alpha in ([0.0] if quick else [0.0, 0.45]):
@@ -31,6 +31,7 @@ def run(quick: bool = False):
                 f"acc={r.acc_mtl:.3f} smashed_dim={cfg.mlp_dims[split]} "
                 f"round_KB={per_round/1e3:.1f}",
             ))
+    dump_rows_json(json_path, "ablation_split_point", quick, rows)
     return rows
 
 

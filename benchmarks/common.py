@@ -17,18 +17,32 @@ round and cap slow clients' local-step budgets; byte accounting then
 scales with each round's PARTICIPANTS, not M (benchmarks/
 fig5_participation.py sweeps this). The default is the classic full
 synchronous round.
+
+Edge topology & the simulated clock: pass a `topology`
+(repro.core.topology) and every round's TrafficEvents are billed on its
+links — RunResult then carries `sim_to_acc` (simulated wall-clock seconds
+to each accuracy threshold) and `total_sim_s`, the quantities
+benchmarks/time_to_accuracy.py compares across algorithms under asymmetric
+links.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.algorithms import HParams, get_algorithm, jit_round_fn, num_rounds
+from repro.core.algorithms import (
+    HParams,
+    get_algorithm,
+    jit_round_fn,
+    num_rounds,
+    simulate_round_walltime,
+)
+from repro.core.comm_cost import model_param_counts
 from repro.core.schedule import (
     ScheduleConfig,
     capability_profile,
@@ -40,7 +54,6 @@ from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
 from repro.models import build_model
 from repro.utils.jit_cache import enable_compilation_cache  # noqa: F401 (re-export)
-from repro.utils.sharding import strip
 
 ALGS = ["fedavg", "fedprox", "fedem", "splitfed", "smofi", "parallelsfl",
         "mtsl"]
@@ -58,6 +71,34 @@ class RunResult:
     wall_s: float
     total_bytes: int = 0  # cumulative bytes over the whole run
     mean_participants: float = 0.0  # avg participating clients per round
+    # simulated wall-clock (topology runs only): threshold -> seconds
+    sim_to_acc: dict = field(default_factory=dict)
+    total_sim_s: float = 0.0
+
+
+def dump_rows_json(json_path, benchmark: str, quick: bool, rows,
+                   extra: dict | None = None):
+    """Uniform --json emission for row-oriented suites: {"benchmark",
+    "quick", "rows": [{name, us_per_call, derived}]} plus suite-specific
+    `extra` keys. Most of benchmarks/run.py's suites write this shape;
+    fig5_participation and throughput predate it and keep their own
+    dict-shaped schemas (pinned by tests/test_benchmarks_smoke.py), so
+    consumers should key on "benchmark" before assuming "rows"."""
+    if not json_path:
+        return
+    import json
+
+    payload = {
+        "benchmark": benchmark,
+        "quick": quick,
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in rows],
+    }
+    if extra:
+        payload.update(extra)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {json_path}")
 
 
 def make_source(cfg, alpha: float, noise_sigma: float = 0.0, seed: int = 0):
@@ -79,14 +120,6 @@ def test_batches(cfg, src, per_task: int = 64, seed: int = 123):
             "label": jnp.asarray(np.stack(labs), jnp.int32)}
 
 
-def _tower_total_params(model):
-    t = strip(model.init_tower(jax.random.PRNGKey(0)))
-    s = strip(model.init_server(jax.random.PRNGKey(1)))
-    tower = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(t))
-    total = tower + sum(int(np.prod(x.shape)) for x in jax.tree.leaves(s))
-    return tower, total
-
-
 def run_algorithm(
     arch: str,
     algorithm: str,
@@ -104,6 +137,8 @@ def run_algorithm(
     cfg_overrides: dict | None = None,
     hparams: dict | None = None,
     schedule: ScheduleConfig | None = None,
+    topology=None,
+    time_per_sample_s: float = 1e-3,
 ) -> RunResult:
     cfg = get_config(arch, smoke=smoke)
     if cfg_overrides:
@@ -112,13 +147,15 @@ def run_algorithm(
     M = cfg.num_clients
     src = make_source(cfg, alpha, noise_sigma, seed)
     tb = test_batches(cfg, src)
-    tower_p, total_p = _tower_total_params(model)
+    tower_p, total_p = model_param_counts(model)
     rng0 = jax.random.PRNGKey(seed)
     t0 = time.time()
 
     alg = get_algorithm(algorithm)
     scfg = schedule or ScheduleConfig()
-    cap = capability_profile(M, scfg)
+    cap = capability_profile(M, scfg, topology)
+    if scfg.sample_weighted:
+        hparams = {"sample_weighted": True, **(hparams or {})}
     hp = HParams(lr=lr, local_steps=local_steps, **(hparams or {}))
     if not scfg.is_trivial and hp.capability is None:
         hp = hp.with_updates(capability=tuple(cap))
@@ -133,22 +170,54 @@ def run_algorithm(
     eval_fn = jax.jit(alg.eval_fn(model, M))
     trivial_sched = full_schedule(M, spr) if scfg.is_trivial else None
 
+    # the event fold is O(local_steps x M) per call — memoize by the only
+    # inputs that vary round to round (participants, transmitted samples)
+    _bytes_cache: dict = {}
+
     def _round_bytes(P, samples_per_step=None):
-        kw = {}
-        if samples_per_step is not None:
-            # bytes follow the samples ACTUALLY transmitted per local step
-            kw["samples_per_step"] = samples_per_step
-        return alg.round_bytes(cfg, M, batch_per_client, hp,
-                               tower_params=tower_p, total_params=total_p,
-                               num_participants=P, **kw)
+        key = (P, samples_per_step)
+        if key not in _bytes_cache:
+            kw = {}
+            if samples_per_step is not None:
+                # bytes follow the samples ACTUALLY transmitted per step
+                kw["samples_per_step"] = samples_per_step
+            _bytes_cache[key] = alg.round_bytes(
+                cfg, M, batch_per_client, hp, tower_params=tower_p,
+                total_params=total_p, num_participants=P, **kw)
+        return _bytes_cache[key]
 
     # trivial schedules cost the same every round — compute it once
     full_round_bytes = _round_bytes(M) if trivial_sched is not None else None
 
+    # simulated wall-clock on an explicit edge topology (core/topology.py)
+    topo = topology
+    if topo is not None and topo.capability is None:
+        topo = topo.with_capability(cap)
+
+    # under a trivial schedule the round's walltime depends only on whether
+    # it is a sync round — cache the (at most two) values like
+    # full_round_bytes does, instead of re-emitting events every round
+    _sim_cache: dict[bool, float] = {}
+
+    def _round_sim_s(round_idx, sched):
+        sync = round_idx % topo.sync_every == 0
+        if trivial_sched is not None and sync in _sim_cache:
+            return _sim_cache[sync]
+        s = simulate_round_walltime(
+            alg, topo, cfg, M, batch_per_client, hp, sched,
+            tower_params=tower_p, total_params=total_p,
+            time_per_sample_s=time_per_sample_s,
+            round_idx=round_idx, local_steps=spr)
+        if trivial_sched is not None:
+            _sim_cache[sync] = s
+        return s
+
     acc_curve, loss_curve = [], []
     steps_to = {a: None for a in acc_thresholds}
     bytes_to = {a: None for a in acc_thresholds}
+    sim_to = {a: None for a in acc_thresholds}
     cum_bytes = 0
+    sim_s = 0.0
     participants = []
     for i, batch in enumerate(
         client_batches(src, per_round_batch, steps=rounds, seed=seed)
@@ -161,6 +230,8 @@ def run_algorithm(
         # bytes scale with THIS round's participants, not M
         cum_bytes += (full_round_bytes if full_round_bytes is not None
                       else _round_bytes(P, sched.samples_per_step))
+        if topo is not None:
+            sim_s += _round_sim_s(i + 1, sched)
         loss_curve.append(float(metrics["loss"]))
         if (i + 1) % eval_every == 0 or i == rounds - 1:
             acc = float(eval_fn(state, tb)["acc_mtl"])
@@ -170,8 +241,10 @@ def run_algorithm(
                 if steps_to[a] is None and acc >= a:
                     steps_to[a] = gsteps
                     bytes_to[a] = cum_bytes
+                    sim_to[a] = sim_s if topo is not None else None
     final_acc = acc_curve[-1][1] if acc_curve else float("nan")
     return RunResult(algorithm, final_acc, acc_curve, loss_curve,
                      steps_to, bytes_to, time.time() - t0,
                      total_bytes=cum_bytes,
-                     mean_participants=float(np.mean(participants)) if participants else 0.0)
+                     mean_participants=float(np.mean(participants)) if participants else 0.0,
+                     sim_to_acc=sim_to, total_sim_s=sim_s)

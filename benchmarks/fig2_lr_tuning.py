@@ -28,7 +28,7 @@ def _system():
     )
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_path: str | None = None):
     sys = _system()
     panels = {
         "a_separate": sys.run_separate(P0, 0.01, STEPS),
@@ -63,6 +63,10 @@ def run(quick: bool = False):
     }
     for k, v in checks.items():
         rows.append((f"fig2/claim_{k}", 0.0, "PASS" if v else "FAIL"))
+    from benchmarks.common import dump_rows_json
+
+    dump_rows_json(json_path, "fig2_lr_tuning", quick, rows,
+                   extra={"claims": checks})
     return rows
 
 

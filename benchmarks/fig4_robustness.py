@@ -6,10 +6,10 @@ noise MTSL remains the best.
 """
 from __future__ import annotations
 
-from benchmarks.common import run_algorithm
+from benchmarks.common import dump_rows_json, run_algorithm
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_path: str | None = None):
     ls = 20 if quick else 100
     rows = []
     algs = (["fedavg", "mtsl"] if quick
@@ -44,6 +44,7 @@ def run(quick: bool = False):
     best_noisy = max((acc[(a, "s", sigmas[-1])], a) for a in algs)
     rows.append(("fig4b/claim_mtsl_best_under_noise", 0.0,
                  "PASS" if best_noisy[1] == "mtsl" else f"FAIL({best_noisy[1]})"))
+    dump_rows_json(json_path, "fig4_robustness", quick, rows)
     return rows
 
 

@@ -32,8 +32,6 @@ import subprocess
 import sys
 from typing import Optional
 
-import numpy as np
-
 CHIPS = 256
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

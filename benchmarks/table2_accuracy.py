@@ -8,10 +8,10 @@ also holds up against the heterogeneity-aware baselines added in PR 2
 """
 from __future__ import annotations
 
-from benchmarks.common import ALGS, run_algorithm
+from benchmarks.common import ALGS, dump_rows_json, run_algorithm
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_path: str | None = None):
     rows = []
     datasets = [("paper-mlp", "synthetic-MNIST-like")]
     if not quick:
@@ -46,6 +46,7 @@ def run(quick: bool = False):
         assert_note = "PASS" if accs["mtsl"] >= max(
             accs["fedavg"], accs["splitfed"]) - 1e-6 else "FAIL"
         rows.append((f"table2/{dname}/claim_mtsl_best", 0.0, assert_note))
+    dump_rows_json(json_path, "table2_accuracy", quick, rows)
     return rows
 
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import LOCAL_STEPS, make_source, test_batches
 from repro.configs import get_config
@@ -34,7 +33,7 @@ def _exclude(batch, j):
     return out
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_path: str | None = None):
     rows = []
     arch = "paper-mlp"
     cfg = get_config(arch, smoke=quick)
@@ -98,6 +97,10 @@ def run(quick: bool = False):
         rows.append((f"table3/new_client/{alg}", 0.0, f"acc={acc:.3f}"))
     note = "PASS" if accs["mtsl"] >= max(accs["fedavg"], accs["splitfed"]) - 1e-6 else "FAIL"
     rows.append(("table3/claim_mtsl_best", 0.0, note))
+    from benchmarks.common import dump_rows_json
+
+    dump_rows_json(json_path, "table3_new_client", quick, rows,
+                   extra={"accs": accs})
     return rows
 
 

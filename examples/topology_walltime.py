@@ -1,0 +1,70 @@
+"""Deploying the same training run on different edge topologies — a tour
+of core/topology.py at toy scale.
+
+The paper's pitch is the "flexibility of distributed network
+architectures"; the Topology API makes the architecture a first-class
+value:
+
+    star(M)             the classic one-server deployment
+    clustered(M, C)     ParallelSFL's C peer cluster servers + backbone
+    hierarchical(M, C)  edge aggregators under one cloud root
+    multi_server(M, S)  S peer servers that periodically sync; clients
+                        attach to the nearest one (a new MTSL scenario)
+
+Each algorithm declares its round as per-link TrafficEvents, so one fold
+bills the bytes (comm_cost.round_cost_from_events) and one model simulates
+the clock (topology.round_walltime: per-client compute + per-link
+bytes/bandwidth + latency, max over parallel paths, sum over serial
+phases). This script runs mtsl vs fedavg vs parallelsfl on three link
+regimes and prints simulated wall-clock to 70% Accuracy_MTL. Equivalent
+launcher invocation:
+
+    PYTHONPATH=src python -m repro.launch.train --arch paper-mlp \
+        --topology multi-server --num-servers 2 --uplink-mbps 2 \
+        --downlink-mbps 50 --link-latency-ms 5
+
+    PYTHONPATH=src python examples/topology_walltime.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import enable_compilation_cache, run_algorithm
+from repro.configs import get_config
+from repro.core.topology import clustered, mbps, multi_server, star
+
+
+def main():
+    enable_compilation_cache()
+    M = get_config("paper-mlp", smoke=True).num_clients
+
+    regimes = [
+        ("ideal links      ", star(M)),
+        ("slow uplink      ", star(M, uplink=mbps(2.0, 0.005),
+                                   downlink=mbps(50.0, 0.005))),
+        ("slow backbone    ", clustered(M, 2, uplink=mbps(20.0),
+                                        downlink=mbps(20.0),
+                                        backbone=mbps(1.0, 0.02))),
+        ("2 synced servers ", multi_server(M, 2, uplink=mbps(10.0, 0.002),
+                                           downlink=mbps(10.0, 0.002),
+                                           backbone=mbps(5.0, 0.01))),
+    ]
+    print("simulated seconds to 70% Accuracy_MTL (paper-mlp smoke):")
+    print(f"  {'regime':<18} {'mtsl':>10} {'fedavg':>10} {'parallelsfl':>12}")
+    for label, topo in regimes:
+        cols = []
+        for alg in ("mtsl", "fedavg", "parallelsfl"):
+            steps = 200
+            r = run_algorithm("paper-mlp", alg, alpha=0.0, steps=steps,
+                              smoke=True, lr=0.1, eval_every=2,
+                              local_steps=10, batch_per_client=8,
+                              topology=topo)
+            sim = r.sim_to_acc.get(0.7)
+            cols.append(f"{sim:.3f}s" if sim is not None else "n/a")
+        print(f"  {label:<18} {cols[0]:>10} {cols[1]:>10} {cols[2]:>12}")
+    print("\n(the same numbers drive benchmarks/time_to_accuracy.py --json)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,8 @@ runs a real forward/train step on CPU in the test suite.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Callable, Optional
+from dataclasses import dataclass, replace
+from typing import Optional
 
 # ---------------------------------------------------------------------------
 # Input shapes (fixed by the assignment)

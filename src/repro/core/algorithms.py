@@ -61,13 +61,15 @@ consumes `hp.optimizer`/`hp.component_lr`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+import functools
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import comm_cost, federation, lr_policy
+from repro.core import comm_cost, federation, lr_policy, topology
 from repro.core.mtsl import (
     TrainState,
     build_eval_step,
@@ -104,6 +106,10 @@ class HParams:
     # hashable); ParallelSFL clusters similar-capability clients together
     # (federation.cluster_assignment). None -> round-robin clustering.
     capability: Optional[tuple] = None
+    # weight federation means by transmitted samples (schedule.sizes),
+    # classic-FedAvg-style; consumed by the FedAvg-family round builders
+    # (see ScheduleConfig.sample_weighted and federation.participation_mean)
+    sample_weighted: bool = False
 
     def with_updates(self, **kw) -> "HParams":
         return replace(self, **kw)
@@ -135,6 +141,16 @@ class Algorithm:
           not M, and smashed-activation traffic with the samples actually
           transmitted per local step (capability-aware batch sizing;
           None = participants x batch_per_client).
+      round_events(topo, cfg, num_clients, batch_per_client, hp,
+                   tower_params=..., total_params=...,
+                   num_participants=..., samples_per_step=..., sizes=...,
+                   sync_round=...) -> tuple of core.topology.TrafficEvent:
+          the round's traffic as per-link transfers on an explicit edge
+          Topology — drives byte billing (comm_cost.round_cost_from_events)
+          AND the simulated wall-clock model (topology.round_walltime).
+          The built-ins derive round_bytes from these events on star(M)
+          (`events_round_bytes`), so the two views can never diverge;
+          None (custom algorithms) disables per-link accounting.
       state_to_tree / state_from_tree: (de)serialization hooks for
           checkpointing; default identity (msgpack handles NamedTuples).
       serve_params(state) -> {"towers","server"} params for ServeEngine,
@@ -152,6 +168,7 @@ class Algorithm:
     round_fn: Callable[..., Callable]
     eval_fn: Callable[..., Callable]
     round_bytes: Callable[..., int]
+    round_events: Optional[Callable[..., tuple]] = None
     steps_per_round: Callable[[HParams], int] = lambda hp: hp.local_steps
     state_to_tree: Callable[[PyTree], PyTree] = _identity
     state_from_tree: Callable[[PyTree], PyTree] = _identity
@@ -185,6 +202,95 @@ def jit_round_fn(alg: "Algorithm", model, num_clients: int, hp: HParams):
     fn = alg.round_fn(model, num_clients, hp)
     donate = alg.donate_state and jax.default_backend() != "cpu"
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _alg_events(name: str, **fixed):
+    """An Algorithm.round_events builder delegating to the per-algorithm
+    traffic generators in comm_cost: one round of `name` as per-link
+    TrafficEvents on an explicit Topology. `fixed` maps HParams fields to
+    traffic_events kwargs (e.g. local_steps=lambda hp: hp.local_steps)."""
+
+    def round_events(topo, cfg, num_clients, batch_per_client, hp,
+                     *, tower_params=None, total_params=None,
+                     num_participants=None, samples_per_step=None,
+                     sizes=None, sync_round=True):
+        kw = {k: v(hp) for k, v in fixed.items()}
+        return comm_cost.traffic_events(
+            name, topo, cfg, num_clients, batch_per_client,
+            tower_params=tower_params, total_params=total_params,
+            num_participants=num_participants,
+            samples_per_step=samples_per_step, sizes=sizes,
+            sync_round=sync_round, **kw)
+
+    return round_events
+
+
+def simulate_round_walltime(
+    alg: "Algorithm",
+    topo,
+    cfg,
+    num_clients: int,
+    batch_per_client: int,
+    hp: HParams,
+    schedule,
+    *,
+    tower_params: int,
+    total_params: int,
+    time_per_sample_s: float,
+    round_idx: int,
+    local_steps: int,
+) -> float:
+    """One round's simulated wall-clock for `alg` deployed on `topo`: the
+    algorithm's TrafficEvents on the graph's links plus the schedule-aware
+    per-client compute term (topology.round_walltime). The SINGLE billing
+    path shared by train/loop.py's history "sim_time" and
+    benchmarks/common.py's RunResult.sim_to_acc — the two can never drift.
+
+    `schedule` is the round's ClientSchedule; `round_idx` (1-based) gates
+    the periodic multi-server replica sync (topo.sync_every);
+    `local_steps` is the algorithm's steps_per_round and `batch_per_client`
+    the per-step row width the round was generated with.
+    """
+    sizes = None if schedule.sizes is None else np.asarray(schedule.sizes)
+    events = ()
+    if alg.round_events is not None:
+        events = alg.round_events(
+            topo, cfg, num_clients, batch_per_client, hp,
+            tower_params=tower_params, total_params=total_params,
+            num_participants=schedule.num_participants, sizes=sizes,
+            sync_round=(round_idx % topo.sync_every == 0))
+    compute = topology.client_compute_seconds(
+        topo, local_steps=local_steps, samples_per_step=batch_per_client,
+        time_per_sample_s=time_per_sample_s,
+        mask=np.asarray(schedule.mask), budget=np.asarray(schedule.budget),
+        sizes=sizes)
+    return topology.round_walltime(topo, events, compute_s=compute)
+
+
+@functools.lru_cache(maxsize=None)
+def _star_topology(num_clients: int):
+    """star(M) is pure in M — build each size once (round_bytes is called
+    per round on the accounting path)."""
+    return topology.star(num_clients)
+
+
+def events_round_bytes(round_events):
+    """Derive the legacy scalar `round_bytes` from `round_events` by folding
+    the events on the classic star(M) deployment — the registry's byte and
+    event views of an algorithm's traffic come from one declaration."""
+
+    def round_bytes(cfg, num_clients, batch_per_client, hp, *,
+                    tower_params=None, total_params=None,
+                    num_participants=None, samples_per_step=None):
+        topo = _star_topology(num_clients)
+        events = round_events(
+            topo, cfg, num_clients, batch_per_client, hp,
+            tower_params=tower_params, total_params=total_params,
+            num_participants=num_participants,
+            samples_per_step=samples_per_step)
+        return comm_cost.round_cost_from_events(topo, events).total
+
+    return round_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -261,12 +367,7 @@ def _mtsl_eval(model, num_clients):
     return eval_fn
 
 
-def _mtsl_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                total_params=None, num_participants=None,
-                samples_per_step=None):
-    return comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client,
-                                num_participants=num_participants,
-                                samples_per_step=samples_per_step).total
+_mtsl_events = _alg_events("mtsl")
 
 
 register_algorithm(Algorithm(
@@ -274,7 +375,8 @@ register_algorithm(Algorithm(
     init_state=_mtsl_init,
     round_fn=_mtsl_round,
     eval_fn=_mtsl_eval,
-    round_bytes=_mtsl_bytes,
+    round_bytes=events_round_bytes(_mtsl_events),
+    round_events=_mtsl_events,
     steps_per_round=lambda hp: 1,
     serve_params=lambda state: state.params,
     uses_optimizer=True,
@@ -315,21 +417,9 @@ def _shared_state_eval(model, num_clients):
     return eval_fn
 
 
-def _splitfed_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                    total_params=None, num_participants=None,
-                    samples_per_step=None):
-    # k split steps' smashed traffic + one tower-federation exchange
-    smashed = comm_cost.round_cost(
-        "mtsl", cfg, num_clients, batch_per_client,
-        num_participants=num_participants,
-        samples_per_step=samples_per_step).total * hp.local_steps
-    fed = comm_cost.round_cost(
-        "splitfed", cfg, num_clients, batch_per_client,
-        tower_params=tower_params,
-        num_participants=num_participants).total \
-        - comm_cost.round_cost("mtsl", cfg, num_clients, batch_per_client,
-                               num_participants=num_participants).total
-    return smashed + fed
+# k split steps' smashed traffic + one tower-federation exchange
+_splitfed_events = _alg_events("splitfed",
+                               local_steps=lambda hp: hp.local_steps)
 
 
 register_algorithm(Algorithm(
@@ -337,7 +427,8 @@ register_algorithm(Algorithm(
     init_state=_splitfed_init,
     round_fn=_splitfed_round,
     eval_fn=_shared_state_eval,
-    round_bytes=_splitfed_bytes,
+    round_bytes=events_round_bytes(_splitfed_events),
+    round_events=_splitfed_events,
     serve_params=_identity,  # state IS {"towers","server"}
     description="SplitFed [Thapa et al.]: split learning with fed-averaged "
                 "client parts every round.",
@@ -355,7 +446,8 @@ def _fedavg_init(model, rng, num_clients, hp: HParams):
 
 def _fedavg_round(model, num_clients, hp: HParams):
     rf = federation.build_fedavg_round(model, hp.lr, num_clients,
-                                       hp.local_steps)
+                                       hp.local_steps,
+                                       sample_weighted=hp.sample_weighted)
 
     def round_fn(state, batch, schedule=None):
         return rf(state, split_local_steps(batch, hp.local_steps), schedule)
@@ -363,13 +455,24 @@ def _fedavg_round(model, num_clients, hp: HParams):
     return round_fn
 
 
-def _fedavg_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                  total_params=None, num_participants=None,
-                  samples_per_step=None):
-    # full-model exchange only: traffic is independent of the samples sent
-    return comm_cost.round_cost(
-        "fedavg", cfg, num_clients, batch_per_client,
-        total_params=total_params, num_participants=num_participants).total
+# full-model exchange only: traffic is independent of the samples sent
+def _param_only_events(name: str):
+    ev = _alg_events(name, **({"num_components": lambda hp: hp.num_components}
+                              if name == "fedem" else {}))
+
+    def round_events(topo, cfg, num_clients, batch_per_client, hp, *,
+                     tower_params=None, total_params=None,
+                     num_participants=None, samples_per_step=None,
+                     sizes=None, sync_round=True):
+        return ev(topo, cfg, num_clients, batch_per_client, hp,
+                  tower_params=tower_params, total_params=total_params,
+                  num_participants=num_participants,
+                  samples_per_step=None, sizes=sizes, sync_round=sync_round)
+
+    return round_events
+
+
+_fedavg_events = _param_only_events("fedavg")
 
 
 register_algorithm(Algorithm(
@@ -377,7 +480,8 @@ register_algorithm(Algorithm(
     init_state=_fedavg_init,
     round_fn=_fedavg_round,
     eval_fn=federation.eval_fedavg,
-    round_bytes=_fedavg_bytes,
+    round_bytes=events_round_bytes(_fedavg_events),
+    round_events=_fedavg_events,
     description="FedAvg [McMahan et al.]: classic federation of the full "
                 "model; exhibits client drift under heterogeneity.",
 ))
@@ -419,14 +523,8 @@ def _fedem_eval(model, num_clients):
     return eval_fn
 
 
-def _fedem_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                 total_params=None, num_participants=None,
-                 samples_per_step=None):
-    # component exchange only: traffic is independent of the samples sent
-    return comm_cost.round_cost(
-        "fedem", cfg, num_clients, batch_per_client, total_params=total_params,
-        num_components=hp.num_components,
-        num_participants=num_participants).total
+# component exchange only: traffic is independent of the samples sent
+_fedem_events = _param_only_events("fedem")
 
 
 register_algorithm(Algorithm(
@@ -434,7 +532,8 @@ register_algorithm(Algorithm(
     init_state=_fedem_init,
     round_fn=_fedem_round,
     eval_fn=_fedem_eval,
-    round_bytes=_fedem_bytes,
+    round_bytes=events_round_bytes(_fedem_events),
+    round_events=_fedem_events,
     state_to_tree=lambda state: {"components": state[0], "pi": state[1]},
     state_from_tree=lambda tree: (tree["components"], tree["pi"]),
     description="FedEM [Marfoq et al. 2021]: mixture of K shared full models "
@@ -449,7 +548,8 @@ register_algorithm(Algorithm(
 
 def _fedprox_round(model, num_clients, hp: HParams):
     rf = federation.build_fedprox_round(model, hp.lr, num_clients,
-                                        hp.local_steps, hp.prox_mu)
+                                        hp.local_steps, hp.prox_mu,
+                                        sample_weighted=hp.sample_weighted)
 
     def round_fn(state, batch, schedule=None):
         return rf(state, split_local_steps(batch, hp.local_steps), schedule)
@@ -457,13 +557,8 @@ def _fedprox_round(model, num_clients, hp: HParams):
     return round_fn
 
 
-def _fedprox_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                   total_params=None, num_participants=None,
-                   samples_per_step=None):
-    # full-model exchange only: traffic is independent of the samples sent
-    return comm_cost.round_cost(
-        "fedprox", cfg, num_clients, batch_per_client,
-        total_params=total_params, num_participants=num_participants).total
+# full-model exchange only: traffic is independent of the samples sent
+_fedprox_events = _param_only_events("fedprox")
 
 
 register_algorithm(Algorithm(
@@ -471,7 +566,8 @@ register_algorithm(Algorithm(
     init_state=_fedavg_init,  # same replicated full-model layout as fedavg
     round_fn=_fedprox_round,
     eval_fn=federation.eval_fedavg,
-    round_bytes=_fedprox_bytes,
+    round_bytes=events_round_bytes(_fedprox_events),
+    round_events=_fedprox_events,
     description="FedProx [Li et al. 2020]: FedAvg whose local steps add "
                 "(mu/2)·||p - p_global||² drift damping (hp.prox_mu).",
 ))
@@ -519,18 +615,9 @@ def _parallelsfl_from_tree(tree):
     return tree
 
 
-def _parallelsfl_bytes(cfg, num_clients, batch_per_client, hp, *,
-                       tower_params=None, total_params=None,
-                       num_participants=None, samples_per_step=None):
-    server_params = None
-    if tower_params is not None and total_params is not None:
-        server_params = total_params - tower_params
-    return comm_cost.round_cost(
-        "parallelsfl", cfg, num_clients, batch_per_client,
-        tower_params=tower_params, server_params=server_params,
-        local_steps=hp.local_steps, num_clusters=hp.num_clusters,
-        num_participants=num_participants,
-        samples_per_step=samples_per_step).total
+_parallelsfl_events = _alg_events(
+    "parallelsfl", local_steps=lambda hp: hp.local_steps,
+    num_clusters=lambda hp: hp.num_clusters)
 
 
 register_algorithm(Algorithm(
@@ -538,7 +625,8 @@ register_algorithm(Algorithm(
     init_state=_parallelsfl_init,
     round_fn=_parallelsfl_round,
     eval_fn=federation.eval_parallelsfl,
-    round_bytes=_parallelsfl_bytes,
+    round_bytes=events_round_bytes(_parallelsfl_events),
+    round_events=_parallelsfl_events,
     state_from_tree=_parallelsfl_from_tree,
     description="ParallelSFL [Liao et al. 2024]: cluster-wise split "
                 "federation — towers fed-average within their cluster, "
@@ -574,14 +662,7 @@ def _smofi_round(model, num_clients, hp: HParams):
     return round_fn
 
 
-def _smofi_bytes(cfg, num_clients, batch_per_client, hp, *, tower_params=None,
-                 total_params=None, num_participants=None,
-                 samples_per_step=None):
-    return comm_cost.round_cost(
-        "smofi", cfg, num_clients, batch_per_client,
-        tower_params=tower_params, local_steps=hp.local_steps,
-        num_participants=num_participants,
-        samples_per_step=samples_per_step).total
+_smofi_events = _alg_events("smofi", local_steps=lambda hp: hp.local_steps)
 
 
 register_algorithm(Algorithm(
@@ -589,7 +670,8 @@ register_algorithm(Algorithm(
     init_state=_smofi_init,
     round_fn=_smofi_round,
     eval_fn=_shared_state_eval,  # reads {"towers","server"}, like splitfed
-    round_bytes=_smofi_bytes,
+    round_bytes=events_round_bytes(_smofi_events),
+    round_events=_smofi_events,
     serve_params=lambda state: {"towers": state["towers"],
                                 "server": state["server"]},
     description="SMoFi [Yang et al. 2025]: splitfed whose per-client server "

@@ -1,47 +1,64 @@
-"""Analytic edge-network communication accounting (paper Fig. 3b).
+"""Edge-network communication accounting (paper Fig. 3b), event-based.
 
-The paper counts bytes crossing the client<->server links per round:
+Every algorithm's round is declared as per-link `TrafficEvent`s against an
+explicit `core.topology.Topology` (traffic_events below; the Algorithm
+registry re-exposes them as `Algorithm.round_events`). Byte billing is then
+ONE generic fold (`round_cost_from_events`) instead of seven hand-derived
+formulas, and the same events drive the simulated wall-clock model
+(`topology.round_walltime`).
 
-  MTSL     up:  M·(b·|s| + b·|y|)          (smashed data + labels)
-           down: M·(b·|s|)                  (activation gradients)
-  SplitFed MTSL traffic + tower federation: M·(|psi| up + |psi| down)
-  FedAvg   M·(|theta| up + |theta| down)    (full-model grads/params)
+Per-round traffic, as emitted (P participants, n_m samples from client m):
+
+  MTSL     up:  n_m·(|s| + |y|) per client      (smashed data + labels)
+           down: n_m·|s| per client              (activation gradients)
+  SplitFed k MTSL exchanges + tower federation: |psi| up + |psi| down
+           per participant
+  FedAvg   |theta| up + |theta| down per participant
   FedProx  same as FedAvg (the proximal term is computed locally)
-  FedEM    K·M·(|theta| up + |theta| down)  (K components)
-  SMoFi    k local split steps' smashed traffic + tower federation; the
-           step-wise momentum fusion happens BETWEEN server replicas that
-           all live on the ONE central server, so it crosses no network
-           link and is free here
-  ParallelSFL  k local split steps' smashed traffic + within-cluster tower
-           federation (M·|psi| each way) + the per-cluster server-replica
-           merge (C·|theta_s| each way). Unlike SMoFi's co-located
-           replicas, ParallelSFL's C cluster servers are DISTINCT edge
-           entities (one per cluster), so merging them is real network
-           traffic and is counted
+  FedEM    K·|theta| each way per participant    (K components)
+  SMoFi    k split exchanges + tower federation; the step-wise momentum
+           fusion happens between CO-LOCATED server replicas, so it emits
+           no events and is free
+  ParallelSFL  k split exchanges + within-cluster tower federation + the
+           per-cluster server-replica merge: the C cluster servers are
+           DISTINCT edge entities, so each uploads |theta_s| to the merge
+           hub and downloads the merged result — billed on EVERY topology
+           (on star(M) the replicas are logical nodes riding ideal links:
+           bytes counted, zero transfer time)
 
-|s| = d_model elements per token/sample at the split boundary. The model
-counts every byte that crosses a network link in each algorithm's
-deployment topology (client<->server links, plus the inter-server backbone
-where an algorithm has more than one server entity). On the TPU mesh the
-same quantities appear as HLO collectives (measured by the roofline
-harness); this module is the paper-faithful *edge* model.
+Shared-server algorithms deployed on a topology with SEVERAL client-facing
+servers (clustered / hierarchical / multi_server) additionally sync the
+replicated server state once per round (`_sync_events`): via the
+aggregation core when the graph has one, else pairwise over the peer
+backbone. star(M) has one server, so the legacy analytic byte counts are
+reproduced EXACTLY — `round_cost(algorithm=...)` below is now a thin shim
+folding the events on star(M), pinned by goldens in tests/test_topology.py.
+
+|s| = d_model elements per token/sample at the split boundary. On the TPU
+mesh the same quantities appear as HLO collectives (measured by the
+roofline harness); this module is the paper-faithful *edge* model.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig
+from repro.core.topology import DOWN, PEER, UP, Topology, TrafficEvent, star
 from repro.utils import tree as tu
+
+ALGORITHMS = ("mtsl", "splitfed", "fedavg", "fedprox", "fedem", "smofi",
+              "parallelsfl")
 
 
 @dataclass(frozen=True)
 class RoundCost:
     up_bytes: int
     down_bytes: int
+    peer_bytes: int = 0  # same-tier server<->server traffic (multi_server)
 
     @property
     def total(self) -> int:
-        return self.up_bytes + self.down_bytes
+        return self.up_bytes + self.down_bytes + self.peer_bytes
 
 
 def _smashed_elems(cfg: ModelConfig, batch_per_client: int, seq_len: int = 1) -> int:
@@ -66,6 +83,241 @@ def params_count(tree) -> int:
     return tu.tree_size(tree)
 
 
+def model_param_counts(model) -> tuple[int, int]:
+    """(tower_params, total_params) element counts for a registry model —
+    the two quantities every traffic generator is parameterized by."""
+    import jax
+    import numpy as np
+
+    from repro.utils.sharding import strip
+
+    t = strip(model.init_tower(jax.random.PRNGKey(0)))
+    s = strip(model.init_server(jax.random.PRNGKey(1)))
+    tower = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(t))
+    total = tower + sum(int(np.prod(x.shape)) for x in jax.tree.leaves(s))
+    return tower, total
+
+
+# ---------------------------------------------------------------------------
+# per-algorithm traffic generators
+# ---------------------------------------------------------------------------
+
+
+def _per_client_samples(M: int, P: int, batch_per_client: int,
+                        samples_per_step, sizes) -> list[tuple[int, int]]:
+    """[(client index, samples per local step)] for the round's participants.
+
+    With an explicit per-client `sizes` vector (capability-aware batch
+    sizing), clients with a positive size are the participants. With only a
+    TOTAL `samples_per_step`, it is split among the first P clients so the
+    sum is EXACT (largest-remainder: S//P each, first S%P get one more).
+    Default: the first P clients at `batch_per_client` each.
+    """
+    if sizes is not None:
+        return [(m, int(n)) for m, n in enumerate(sizes) if int(n) > 0]
+    if samples_per_step is not None:
+        S = max(int(samples_per_step), 0)
+        base, extra = divmod(S, P)
+        return [(m, base + (1 if m < extra else 0)) for m in range(P)]
+    return [(m, batch_per_client) for m in range(P)]
+
+
+def _split_exchange(topo, parts, s1, lab1, phase, events):
+    """One split-learning step: smashed+labels up, activation grads down."""
+    for m, n in parts:
+        if n > 0:
+            events.append(TrafficEvent(topo.client(m), topo.server_of(m),
+                                       n * (s1 + lab1), phase, UP))
+    for m, n in parts:
+        if n > 0:
+            events.append(TrafficEvent(topo.server_of(m), topo.client(m),
+                                       n * s1, phase + 1, DOWN))
+    return phase + 2
+
+
+def _fed_exchange(topo, parts, nbytes, phase, events):
+    """One parameter federation: every participant uploads `nbytes` to its
+    server and downloads the aggregate."""
+    for m, _ in parts:
+        events.append(TrafficEvent(topo.client(m), topo.server_of(m),
+                                   nbytes, phase, UP))
+    for m, _ in parts:
+        events.append(TrafficEvent(topo.server_of(m), topo.client(m),
+                                   nbytes, phase + 1, DOWN))
+    return phase + 2
+
+
+def _sync_events(topo, nbytes, phase, events, nodes=None, hub=None):
+    """Sync replicated state of `nodes` (default: the topology's servers):
+    via the aggregation core when the graph has one (up to the hub, merged
+    result back down), else pairwise over the peer backbone (one parallel
+    phase). Returns the next free phase."""
+    nodes = list(topo.servers) if nodes is None else list(nodes)
+    hub = hub if hub is not None else topo.core
+    if hub is not None:
+        for s in nodes:
+            events.append(TrafficEvent(s, hub, nbytes, phase, UP))
+        for s in nodes:
+            events.append(TrafficEvent(hub, s, nbytes, phase + 1, DOWN))
+        return phase + 2
+    for a in nodes:
+        for b in nodes:
+            if a != b:
+                events.append(TrafficEvent(a, b, nbytes, phase, PEER))
+    return phase + 1
+
+
+def _require(value, what: str, algorithm: str):
+    if value is None:
+        raise ValueError(f"{algorithm} traffic needs {what}")
+    return value
+
+
+def traffic_events(
+    algorithm: str,
+    topo: Topology,
+    cfg: ModelConfig,
+    num_clients: int,
+    batch_per_client: int,
+    *,
+    seq_len: int = 1,
+    tower_params: int | None = None,
+    total_params: int | None = None,
+    server_params: int | None = None,
+    bytes_per_elem: int = 4,
+    label_bytes: int = 4,
+    num_components: int = 3,
+    local_steps: int = 1,
+    num_clusters: int = 2,
+    num_participants: int | None = None,
+    samples_per_step: int | None = None,
+    sizes=None,
+    sync_round: bool = True,
+) -> tuple[TrafficEvent, ...]:
+    """One round of `algorithm` on `topo`, as per-link TrafficEvents.
+
+    mtsl/splitfed keep their split-exchange semantics per local step;
+    fedavg/fedprox/fedem exchange parameters once per round regardless of
+    local steps (local compute is free on the network); smofi/parallelsfl
+    compose `local_steps` split exchanges with their federation phases.
+
+    `num_participants` bills the round's first P clients (byte totals only
+    depend on the count); `sizes` gives exact per-client sample counts
+    (capability-aware batch sizing) and overrides both it and
+    `samples_per_step` (a total, split exactly across participants).
+    `sync_round=False` skips the multi-server replica sync (rounds between
+    periodic syncs, `Topology.sync_every`).
+    """
+    if server_params is None and (tower_params is not None
+                                  and total_params is not None):
+        server_params = total_params - tower_params
+    M = num_clients
+    P = M if num_participants is None else max(1, min(num_participants, M))
+    parts = _per_client_samples(M, P, batch_per_client, samples_per_step,
+                                sizes)
+    s1 = _smashed_elems(cfg, 1, seq_len) * bytes_per_elem
+    lab1 = max(seq_len, 1) * label_bytes
+    multi = topo.num_servers > 1
+    events: list[TrafficEvent] = []
+    phase = 0
+
+    if algorithm == "mtsl":
+        phase = _split_exchange(topo, parts, s1, lab1, phase, events)
+        if multi and sync_round:
+            nb = _require(server_params, "server_params", algorithm)
+            phase = _sync_events(topo, nb * bytes_per_elem, phase, events)
+        return tuple(events)
+
+    if algorithm == "splitfed":
+        tp = _require(tower_params, "tower_params", algorithm)
+        for _ in range(max(local_steps, 1)):
+            phase = _split_exchange(topo, parts, s1, lab1, phase, events)
+        phase = _fed_exchange(topo, parts, tp * bytes_per_elem, phase, events)
+        if multi and sync_round:
+            nb = _require(server_params, "server_params", algorithm) + tp
+            phase = _sync_events(topo, nb * bytes_per_elem, phase, events)
+        return tuple(events)
+
+    if algorithm in ("fedavg", "fedprox"):
+        tot = _require(total_params, "total_params", algorithm)
+        phase = _fed_exchange(topo, parts, tot * bytes_per_elem, phase,
+                              events)
+        if multi and sync_round:
+            phase = _sync_events(topo, tot * bytes_per_elem, phase, events)
+        return tuple(events)
+
+    if algorithm == "fedem":
+        tot = _require(total_params, "total_params", algorithm)
+        nb = num_components * tot * bytes_per_elem
+        phase = _fed_exchange(topo, parts, nb, phase, events)
+        if multi and sync_round:
+            phase = _sync_events(topo, nb, phase, events)
+        return tuple(events)
+
+    if algorithm == "smofi":
+        # k split steps against per-client server replicas (co-located, so
+        # the step-wise momentum fusion is free) + one tower federation
+        tp = _require(tower_params, "tower_params", algorithm)
+        for _ in range(max(local_steps, 1)):
+            phase = _split_exchange(topo, parts, s1, lab1, phase, events)
+        phase = _fed_exchange(topo, parts, tp * bytes_per_elem, phase, events)
+        if multi and sync_round:
+            nb = _require(server_params, "server_params", algorithm) + tp
+            phase = _sync_events(topo, nb * bytes_per_elem, phase, events)
+        return tuple(events)
+
+    if algorithm == "parallelsfl":
+        # k split steps + within-cluster tower federation + merging the C
+        # DISTINCT cluster-server replicas. The replicas map onto the
+        # topology's servers when the counts agree (clustered(M, C));
+        # otherwise they are logical entities behind the access servers
+        # (ideal links — bytes billed, zero transfer time), which is
+        # exactly the legacy star(M) accounting.
+        tp = _require(tower_params, "tower_params", algorithm)
+        sp = _require(server_params, "server_params", algorithm)
+        C = max(1, min(num_clusters, M))
+        for _ in range(max(local_steps, 1)):
+            phase = _split_exchange(topo, parts, s1, lab1, phase, events)
+        phase = _fed_exchange(topo, parts, tp * bytes_per_elem, phase, events)
+        replicas = (topo.servers if topo.num_servers == C
+                    else tuple(f"replica{c}" for c in range(C)))
+        # merge routing follows the graph: via the aggregation core when
+        # there is one; pairwise over the real peer backbone when the
+        # replicas ARE the topology's servers (multi_server); and via a
+        # logical hub on ideal links otherwise (star — which also keeps the
+        # degenerate C == 1 merge billed exactly as the legacy formulas do)
+        if topo.core is None and replicas == topo.servers and C > 1:
+            hub = None  # peer path: real backbone links between replicas
+        else:
+            hub = topo.core or "merge_hub"
+        phase = _sync_events(topo, sp * bytes_per_elem, phase, events,
+                             nodes=replicas, hub=hub)
+        return tuple(events)
+
+    raise ValueError(
+        f"unknown algorithm {algorithm!r}; have {ALGORITHMS}")
+
+
+# ---------------------------------------------------------------------------
+# the generic fold + the legacy analytic shim
+# ---------------------------------------------------------------------------
+
+
+def round_cost_from_events(topo: Topology, events) -> RoundCost:
+    """Fold TrafficEvents into per-direction byte totals. The topology sets
+    the vocabulary the events are written against; byte billing itself is
+    link-independent (transfer TIME is topology.round_walltime's job)."""
+    up = down = peer = 0
+    for e in events:
+        if e.direction == UP:
+            up += e.bytes
+        elif e.direction == DOWN:
+            down += e.bytes
+        else:
+            peer += e.bytes
+    return RoundCost(up_bytes=up, down_bytes=down, peer_bytes=peer)
+
+
 def round_cost(
     algorithm: str,
     cfg: ModelConfig,
@@ -83,65 +335,27 @@ def round_cost(
     num_participants: int | None = None,
     samples_per_step: int | None = None,
 ) -> RoundCost:
-    """Bytes per training round for one of {mtsl, splitfed, fedavg, fedprox,
-    fedem, smofi, parallelsfl}.
+    """Legacy analytic interface: bytes per round on the algorithm's classic
+    star(M) deployment. Now a thin shim — fold the algorithm's TrafficEvents
+    on star(M) with ideal links; the result is bit-identical to the
+    pre-redesign hand-derived formulas (pinned in tests/test_topology.py).
 
     mtsl/splitfed/fedavg/fedem keep their original one-exchange semantics
     (callers compose local steps themselves); the smofi/parallelsfl branches
     take `local_steps` and return the full round.
 
     Under partial participation (core/schedule.py) only the round's
-    participants exchange traffic, so every per-client term scales with
-    `num_participants` (default: all M clients). ParallelSFL's C-replica
-    backbone merge still counts all C cluster servers — the replicas are
-    per-cluster edge entities that sync every round regardless of which
-    clients were sampled. Straggler budgets are not modeled here: a
-    participant is billed its full round (an upper bound on smashed
-    traffic).
-
-    `samples_per_step` (capability-aware batch sizing, core/schedule.py)
-    overrides the per-step smashed-sample count: the split-learning upload/
-    download is billed for the samples ACTUALLY transmitted across all
-    participants (`int(schedule.sizes.sum())`) instead of the nominal
-    `num_participants * batch_per_client`. Parameter-federation traffic
-    (tower/model exchanges) is unaffected — those bytes do not depend on
-    batch size."""
-    M = num_clients
-    P = M if num_participants is None else max(1, min(num_participants, M))
-    # smashed traffic is exactly linear in the sample count: bill per sample
-    s1 = _smashed_elems(cfg, 1, seq_len) * bytes_per_elem
-    lab1 = max(seq_len, 1) * label_bytes
-    S = (P * batch_per_client if samples_per_step is None
-         else max(int(samples_per_step), 0))
-    smash_up = S * (s1 + lab1)
-    smash_down = S * s1
-    if algorithm == "mtsl":
-        return RoundCost(up_bytes=smash_up, down_bytes=smash_down)
-    if algorithm == "splitfed":
-        assert tower_params is not None
-        fed = P * tower_params * bytes_per_elem
-        return RoundCost(up_bytes=smash_up + fed, down_bytes=smash_down + fed)
-    if algorithm in ("fedavg", "fedprox"):
-        assert total_params is not None
-        fed = P * total_params * bytes_per_elem
-        return RoundCost(up_bytes=fed, down_bytes=fed)
-    if algorithm == "fedem":
-        assert total_params is not None
-        fed = num_components * P * total_params * bytes_per_elem
-        return RoundCost(up_bytes=fed, down_bytes=fed)
-    if algorithm == "smofi":
-        # k split steps against per-client server replicas (all server-side,
-        # so momentum fusion is free on the edge) + one tower federation
-        assert tower_params is not None
-        fed = P * tower_params * bytes_per_elem
-        return RoundCost(up_bytes=local_steps * smash_up + fed,
-                         down_bytes=local_steps * smash_down + fed)
-    if algorithm == "parallelsfl":
-        # k split steps + within-cluster tower federation + merging the C
-        # cluster server replicas across the backbone
-        assert tower_params is not None and server_params is not None
-        C = max(1, min(num_clusters, M))
-        fed = P * tower_params * bytes_per_elem + C * server_params * bytes_per_elem
-        return RoundCost(up_bytes=local_steps * smash_up + fed,
-                         down_bytes=local_steps * smash_down + fed)
-    raise ValueError(algorithm)
+    participants exchange traffic (`num_participants`, default all M);
+    `samples_per_step` (capability-aware batch sizing) bills the split
+    upload/download by the samples ACTUALLY transmitted."""
+    topo = star(num_clients)
+    k = local_steps if algorithm in ("smofi", "parallelsfl") else 1
+    events = traffic_events(
+        algorithm, topo, cfg, num_clients, batch_per_client,
+        seq_len=seq_len, tower_params=tower_params,
+        total_params=total_params, server_params=server_params,
+        bytes_per_elem=bytes_per_elem, label_bytes=label_bytes,
+        num_components=num_components, local_steps=k,
+        num_clusters=num_clusters, num_participants=num_participants,
+        samples_per_step=samples_per_step)
+    return round_cost_from_events(topo, events)

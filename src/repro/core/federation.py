@@ -147,7 +147,8 @@ def full_model_loss(model: Model):
 
 
 def build_fedprox_round(model: Model, lr: float, num_clients: int,
-                        local_steps: int, mu: float = 0.0) -> Callable:
+                        local_steps: int, mu: float = 0.0,
+                        sample_weighted: bool = False) -> Callable:
     """One FedProx ROUND [Li et al., 2020]: every client runs `local_steps`
     SGD steps on its own data, each step minimizing
 
@@ -164,7 +165,11 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
     round-end average runs over participants only (non-participants still
     download the new global model). With `schedule.sizes` (capability-aware
     batch sizing), client m's loss/gradient each step use only the first
-    sizes[m] samples of its padded local batch.
+    sizes[m] samples of its padded local batch; `sample_weighted`
+    additionally weights the round-end parameter average by those
+    transmitted sample counts (classic FedAvg weighting — uniform sizes
+    reproduce the unweighted average bit-for-bit, see
+    schedule.participation_mean).
     """
     loss_fn = full_model_loss(model)
 
@@ -173,6 +178,8 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
             schedule = full_schedule(num_clients, local_steps)
         steps_t = jnp.arange(local_steps)
         smask = schedule_sample_mask(schedule, batch)
+        fed_w = (schedule.sizes.astype(jnp.float32)
+                 if sample_weighted and schedule.sizes is not None else None)
 
         def client_run(tp, sp, client_batch, budget, sm):
             anchor = {"tower": tp, "server": sp}
@@ -200,9 +207,10 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
         pcs, losses = _vmap_with_smask(
             client_run, params["towers"], params["servers"], batch,
             schedule.budget, smask)
-        # federation: average over participants, broadcast back to everyone
+        # federation: average over participants (optionally weighted by
+        # transmitted samples), broadcast back to everyone
         avg = jax.tree.map(
-            lambda x: participation_bcast_mean(x, schedule.mask), pcs)
+            lambda x: participation_bcast_mean(x, schedule.mask, fed_w), pcs)
         new = {"towers": avg["tower"], "servers": avg["server"]}
         losses = losses * schedule.mask
         return new, {"loss": jnp.sum(losses), "per_task": losses}
@@ -211,11 +219,14 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
 
 
 def build_fedavg_round(model: Model, lr: float, num_clients: int,
-                       local_steps: int) -> Callable:
+                       local_steps: int,
+                       sample_weighted: bool = False) -> Callable:
     """One FedAvg ROUND: every client runs `local_steps` SGD steps on its own
-    data from the shared model, then all full-model params are averaged.
+    data from the shared model, then all full-model params are averaged
+    (optionally weighted by transmitted samples, classic-FedAvg-style).
     FedProx with mu=0 (identical trace — see build_fedprox_round)."""
-    return build_fedprox_round(model, lr, num_clients, local_steps, mu=0.0)
+    return build_fedprox_round(model, lr, num_clients, local_steps, mu=0.0,
+                               sample_weighted=sample_weighted)
 
 
 def build_splitfed_round(model: Model, lr: float, num_clients: int,
@@ -228,7 +239,6 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
     contributes zero gradient to the server and its tower holds; the tower
     federation averages over participants only. With `schedule.sizes`, each
     client's per-step loss runs over its first sizes[m] samples only."""
-    cfg = model.cfg
     M = num_clients
     from repro.core.mtsl import make_loss_fn
 
@@ -385,7 +395,6 @@ def eval_parallelsfl(model: Model, num_clients: int):
     """Eval {"towers": [M,...], "servers": [C,...], "cidx": [M]} states:
     client m is served by its cluster's server replica, using the SAME
     client->cluster map the round builder used (stored in the state)."""
-    M = num_clients
 
     def eval_fn(params, batch):
         cidx = params["cidx"]
@@ -492,8 +501,6 @@ def init_fedavg_params(model: Model, rng, num_clients: int):
 
 def eval_fedavg(model: Model, num_clients: int):
     """Eval the (shared) FedAvg model per task: use client m's copy."""
-    cfg = model.cfg
-    M = num_clients
 
     def eval_fn(params, batch):
         def client_eval(tp, sp, inputs, labels):
@@ -525,7 +532,6 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
     a client's E- and M-steps run over its first sizes[m] samples only.
     """
     loss_fn = full_model_loss(model)
-    K = num_components
 
     def per_sample_losses(comps, mb, sm):
         # comps: [K, ...]; mb: one client's local batch (no client axis)
@@ -542,8 +548,8 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
             def one_step(comps, xs):
                 mb, t = xs
                 active = t < budget
-                l = per_sample_losses(comps, mb, sm)  # [K]
-                r = jax.nn.softmax(jnp.log(pi_m + 1e-12) - l)  # [K]
+                lk = per_sample_losses(comps, mb, sm)  # [K]
+                r = jax.nn.softmax(jnp.log(pi_m + 1e-12) - lk)  # [K]
                 r = jax.lax.stop_gradient(r)
 
                 def wloss(cs):
@@ -665,10 +671,10 @@ def build_fedem_train_step(
 
         # M-step: responsibility-weighted loss over all components
         def total_loss(components):
-            l = jax.vmap(_per_sample_loss, in_axes=(0, None))(components, batch)
-            return jnp.sum(r * l) / (M * l.shape[-1]), l
+            lkm = jax.vmap(_per_sample_loss, in_axes=(0, None))(components, batch)
+            return jnp.sum(r * lkm) / (M * lkm.shape[-1]), lkm
 
-        (loss, l), grads = jax.value_and_grad(total_loss, has_aux=True)(
+        (loss, _lkm), grads = jax.value_and_grad(total_loss, has_aux=True)(
             state.components
         )
         updates, opt_state = base_optimizer.update(

@@ -22,7 +22,6 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.core import federation
 from repro.core import schedule as schedule_mod
 from repro.core.split import is_client_path, stack_towers, replicate_tower
@@ -154,7 +153,6 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
             wper = per if participation is None else per * participation
             loss = jnp.sum(wper) + aux
             return loss, {"loss": loss, "per_task": per, "acc": acc, "aux": aux}
-        tokens = batch["tokens"].reshape((-1,) + batch["tokens"].shape[2:])
         per_logits = logits.astype(jnp.float32).reshape(
             (M, -1) + logits.shape[1:])
         if sample_mask is None:

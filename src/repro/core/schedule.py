@@ -134,6 +134,13 @@ class ScheduleConfig:
     # headroom up to `batch_boost` x the nominal per-step batch.
     capability_batching: bool = False
     batch_boost: float = 2.0
+    # weight federation means by transmitted samples (ClientSchedule.sizes),
+    # classic-FedAvg-style: a client contributing twice the samples gets
+    # twice the weight in the FedAvg-family round-end parameter average
+    # (participation_mean(..., weights=sizes)). With uniform sizes (or no
+    # capability batching, where sizes is None) the trajectory is bit-for-
+    # bit the unweighted one — pinned in tests/test_sample_weighted.py.
+    sample_weighted: bool = False
 
     @property
     def is_trivial(self) -> bool:
@@ -155,12 +162,23 @@ def full_schedule(num_clients: int, local_steps: int) -> ClientSchedule:
     )
 
 
-def capability_profile(num_clients: int, scfg: ScheduleConfig) -> np.ndarray:
+def capability_profile(num_clients: int, scfg: ScheduleConfig,
+                       topology=None) -> np.ndarray:
     """[M] relative compute speeds in (0, 1], fixed for the run.
 
-    `straggler_frac` of the clients (chosen by `scfg.seed`) are slow and
-    draw a capability uniform in [min_capability, 1); the rest run at 1.0.
+    With a `core.topology.Topology` that carries an EXPLICIT capability
+    profile on its client nodes, that profile is the source of truth (the
+    deployment graph owns its devices' speeds). Otherwise `straggler_frac`
+    of the clients (chosen by `scfg.seed`) are slow and draw a capability
+    uniform in [min_capability, 1); the rest run at 1.0.
     """
+    if topology is not None and topology.capability is not None:
+        cap = topology.capability_array()
+        if cap.shape != (num_clients,):
+            raise ValueError(
+                f"topology capability profile has shape {cap.shape}, "
+                f"want ({num_clients},)")
+        return cap
     cap = np.ones((num_clients,), np.float64)
     n_slow = int(round(scfg.straggler_frac * num_clients))
     n_slow = min(max(n_slow, 0), num_clients)
@@ -334,21 +352,38 @@ def broadcast_weights(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     return w.reshape(w.shape + (1,) * (x.ndim - w.ndim))
 
 
-def participation_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+def participation_mean(x: jnp.ndarray, mask: jnp.ndarray,
+                       weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """[M, ...] -> [...]: mean over participating clients only.
 
     Masked-out clients are ignored EXACTLY (their values are multiplied by
     0.0 before the sum — property-tested in tests/test_schedule.py); an
     all-ones mask reduces to sum(x)/M, the plain mean.
+
+    `weights` ([M], e.g. ClientSchedule.sizes) makes the mean sample-
+    weighted, classic-FedAvg-style: participant m's weight is
+    mask[m]·weights[m], normalized by the LARGEST participant weight before
+    the reduction. The normalization makes uniform weights reduce to the
+    plain participation mean BIT-FOR-BIT (w/max(w) is exactly the mask:
+    s/s == 1.0 and 0·s/s == 0.0 in IEEE arithmetic), so enabling
+    sample weighting under uniform sizes cannot perturb a trajectory —
+    property-tested in tests/test_sample_weighted.py.
     """
-    wsum = jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.sum(x * broadcast_weights(mask, x), axis=0) / wsum
+    w = mask
+    if weights is not None:
+        w = mask * weights
+        wmax = jnp.max(w)
+        w = jnp.where(wmax > 0, w / wmax, w)
+    wsum = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum(x * broadcast_weights(w, x), axis=0) / wsum
 
 
-def participation_bcast_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+def participation_bcast_mean(
+        x: jnp.ndarray, mask: jnp.ndarray,
+        weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """[M, ...] -> [M, ...]: the participation-weighted mean broadcast back
     to every client (the federation 'download')."""
-    m = participation_mean(x, mask)[None]
+    m = participation_mean(x, mask, weights)[None]
     return jnp.broadcast_to(m, x.shape)
 
 

@@ -15,8 +15,6 @@ task); alpha = 1-1/M -> i.i.d. tasks. DESIGN.md §7 documents why qualitative
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
-
 import numpy as np
 
 

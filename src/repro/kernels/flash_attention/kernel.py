@@ -85,9 +85,10 @@ def _flash_kernel(
 
     @pl.when(ik == nk - 1)
     def _finalize():
-        l = l_scr[...]
-        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zero output
-        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = l_scr[...]
+        # fully-masked rows -> zero output
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def flash_attention_fwd(

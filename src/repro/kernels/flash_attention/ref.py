@@ -5,8 +5,6 @@ default math path of the model zoo on CPU and in the dry-run.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -133,8 +131,8 @@ def mha_chunked(
     m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
     acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, denom, acc), _ = jax.lax.scan(
         body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
-    l = jnp.where(l == 0.0, 1.0, l)
-    out = (acc / l[..., None]).astype(q.dtype)  # [B, Hkv, G, Sq, D]
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out = (acc / denom[..., None]).astype(q.dtype)  # [B, Hkv, G, Sq, D]
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)

@@ -8,7 +8,6 @@ prefetch (SMEM) so one compiled kernel serves every component.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
 from repro.kernels.ssd_scan.ref import ssd_reference

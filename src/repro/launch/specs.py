@@ -13,17 +13,15 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
-from repro.core.mtsl import TrainState, build_train_step
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.split import stack_towers
-from repro.models.registry import Model, build_model
+from repro.models.registry import Model
 from repro.nn import abstract_params
 from repro.optim.optimizers import Optimizer
-from repro.serve.engine import ServeCaches, build_decode_step, build_prefill_step
+from repro.serve.engine import ServeCaches
 from repro.utils import tree as tu
-from repro.utils.sharding import axes_of, strip, tree_shardings
+from repro.utils.sharding import axes_of, strip
 
 PyTree = Any
 

@@ -10,15 +10,29 @@ Two modes:
 `--algorithm` accepts anything in the Algorithm registry
 (core/algorithms.py): mtsl, splitfed, fedavg, fedprox, fedem, smofi,
 parallelsfl, plus any algorithm registered by user code before invoking
-`main`.
+`main`. Algorithm hyper-parameters are registry-driven: `--hp key=value`
+(repeatable) sets any scalar HParams field, so a newly registered
+algorithm's knobs get CLI exposure with no launcher change; the historic
+per-algorithm flags (--prox-mu, --momentum, --num-clusters) remain as
+deprecated aliases.
+
+`--topology` deploys the run on an explicit edge graph (core/topology.py):
+star | clustered | hierarchical | multi-server, with per-link physics from
+--uplink-mbps/--downlink-mbps/--backbone-mbps/--link-latency-ms. The
+training math is unchanged; history gains "sim_time", the simulated
+wall-clock (per-client compute + per-link transfer).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --steps 100
-    PYTHONPATH=src python -m repro.launch.train --arch paper-mlp --algorithm fedem
+    PYTHONPATH=src python -m repro.launch.train --arch paper-mlp \
+        --algorithm fedem --hp num_components=4
+    PYTHONPATH=src python -m repro.launch.train --arch paper-mlp \
+        --topology multi-server --num-servers 3 --uplink-mbps 10
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 from repro.configs import get_config
 from repro.core import lr_policy
@@ -29,12 +43,52 @@ from repro.core.algorithms import (
     num_rounds,
 )
 from repro.core.schedule import ScheduleConfig, padded_batch_per_client
+from repro.core.topology import TOPOLOGIES, build_topology, mbps
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
 from repro.models.registry import build_model
 from repro.optim import adamw, sgd
 from repro.train.loop import TrainConfig, train
+
+# scalar HParams fields settable via --hp key=value (registry-driven: any
+# new field with a bool/int/float default is exposed automatically)
+_HP_FIELDS = {
+    f.name: f.default
+    for f in dataclasses.fields(HParams)
+    if isinstance(f.default, (bool, int, float))
+}
+
+
+def _coerce_hp(key: str, value: str):
+    default = _HP_FIELDS[key]
+    if isinstance(default, bool):
+        if value.lower() in ("1", "true", "yes", "on"):
+            return True
+        if value.lower() in ("0", "false", "no", "off"):
+            return False
+        raise argparse.ArgumentTypeError(
+            f"--hp {key}= expects a boolean, got {value!r}")
+    return type(default)(value)
+
+
+def parse_hp_overrides(items) -> dict:
+    """['key=value', ...] -> validated HParams override dict."""
+    out = {}
+    for item in items:
+        key, sep, value = item.partition("=")
+        key = key.strip().replace("-", "_")
+        if not sep:
+            raise SystemExit(f"--hp expects key=value, got {item!r}")
+        if key not in _HP_FIELDS:
+            raise SystemExit(
+                f"unknown hyper-parameter {key!r}; --hp accepts: "
+                f"{', '.join(sorted(_HP_FIELDS))}")
+        try:
+            out[key] = _coerce_hp(key, value.strip())
+        except (ValueError, argparse.ArgumentTypeError) as e:
+            raise SystemExit(f"bad --hp {item!r}: {e}") from None
+    return out
 
 
 def main(argv=None):
@@ -45,12 +99,38 @@ def main(argv=None):
                     help="total gradient steps (rounds x local-steps)")
     ap.add_argument("--local-steps", type=int, default=1,
                     help="local steps per round for round-based FL algorithms")
-    ap.add_argument("--prox-mu", type=float, default=0.01,
-                    help="fedprox proximal strength")
-    ap.add_argument("--momentum", type=float, default=0.9,
-                    help="smofi server-side momentum coefficient")
-    ap.add_argument("--num-clusters", type=int, default=2,
-                    help="parallelsfl cluster count (clamped to [1, M])")
+    ap.add_argument("--hp", action="append", default=[], metavar="KEY=VALUE",
+                    help="algorithm hyper-parameter override (repeatable); "
+                         "any scalar HParams field, e.g. --hp prox_mu=0.1 "
+                         "--hp num_clusters=3 --hp sample_weighted=true. "
+                         "Registry-driven: newly registered algorithms' "
+                         "knobs need no new launcher flags")
+    ap.add_argument("--prox-mu", type=float, default=None,
+                    help="DEPRECATED alias for --hp prox_mu=...")
+    ap.add_argument("--momentum", type=float, default=None,
+                    help="DEPRECATED alias for --hp momentum=...")
+    ap.add_argument("--num-clusters", type=int, default=None,
+                    help="DEPRECATED alias for --hp num_clusters=...")
+    ap.add_argument("--topology", default=None,
+                    choices=[t.replace("_", "-") for t in TOPOLOGIES],
+                    help="deploy on an explicit edge graph (core/topology.py)"
+                         " and report the simulated wall-clock per round")
+    ap.add_argument("--num-servers", type=int, default=2,
+                    help="edge servers for clustered/hierarchical/"
+                         "multi-server topologies")
+    ap.add_argument("--uplink-mbps", type=float, default=None,
+                    help="client->server bandwidth (default: infinite)")
+    ap.add_argument("--downlink-mbps", type=float, default=None,
+                    help="server->client bandwidth (default: infinite)")
+    ap.add_argument("--backbone-mbps", type=float, default=None,
+                    help="server<->server/core bandwidth (default: infinite)")
+    ap.add_argument("--link-latency-ms", type=float, default=0.0,
+                    help="one-way latency applied to every declared link")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="multi-server replica sync period, in rounds")
+    ap.add_argument("--sim-ms-per-sample", type=float, default=1.0,
+                    help="simulated client compute per sample at capability "
+                         "1.0 (the walltime model's compute unit)")
     ap.add_argument("--participation-rate", type=float, default=1.0,
                     help="per-round client participation probability "
                          "(1.0 = classic full synchronous rounds)")
@@ -110,7 +190,28 @@ def main(argv=None):
         capability_batching=args.capability_batching,
         batch_boost=args.batch_boost)
 
-    spr = alg.steps_per_round(HParams(local_steps=args.local_steps))
+    # registry-driven hyper-parameters: --hp key=value, with the historic
+    # per-algorithm flags folded in as deprecated aliases (--hp wins)
+    hp_overrides = parse_hp_overrides(args.hp)
+    for flag, key in (("--prox-mu", "prox_mu"), ("--momentum", "momentum"),
+                      ("--num-clusters", "num_clusters")):
+        val = getattr(args, key)
+        if val is not None:
+            print(f"note: {flag} is deprecated; use --hp {key}={val}")
+            hp_overrides.setdefault(key, val)
+
+    topo = None
+    if args.topology is not None:
+        lat = args.link_latency_ms * 1e-3
+        topo = build_topology(
+            args.topology, M, num_servers=args.num_servers,
+            uplink=mbps(args.uplink_mbps or 0.0, lat),
+            downlink=mbps(args.downlink_mbps or 0.0, lat),
+            backbone=mbps(args.backbone_mbps or 0.0, lat),
+            sync_every=args.sync_every)
+
+    spr = alg.steps_per_round(
+        HParams(local_steps=args.local_steps).with_updates(**hp_overrides))
     rounds = num_rounds(args.steps, spr)
     # capability batching pads the generated rows so fast clients have
     # headroom; the nominal per-step batch still sets the round total
@@ -141,14 +242,19 @@ def main(argv=None):
                        lr=args.lr, local_steps=args.local_steps,
                        checkpoint_path=args.checkpoint,
                        checkpoint_every=100 if args.checkpoint else 0,
-                       seed=args.seed, prox_mu=args.prox_mu,
-                       momentum=args.momentum,
-                       num_clusters=args.num_clusters,
+                       seed=args.seed,
+                       hp_overrides=hp_overrides,
                        schedule=scfg,
                        prefetch=args.prefetch,
-                       batch_per_client=args.batch_per_client)
+                       batch_per_client=args.batch_per_client,
+                       topology=topo,
+                       time_per_sample_s=args.sim_ms_per_sample * 1e-3)
     state, history = train(model, opt, batches, tcfg, M, component_lr=clr)
     print(f"final loss: {history[-1]['loss']:.4f}")
+    if topo is not None and history:
+        print(f"simulated wall-clock ({topo.name}, {topo.num_servers} "
+              f"server(s)): {history[-1]['sim_time']:.2f}s over "
+              f"{history[-1]['round']} rounds")
     return state, history
 
 

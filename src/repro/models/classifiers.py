@@ -8,8 +8,6 @@ paper's Tables 2-3 / Figures 2-4. Split semantics match the paper:
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_attention.ref import mha_chunked, mha_reference
 from repro.nn import param
-from repro.utils.sharding import Annotated
 
 # ---------------------------------------------------------------------------
 # norms / rope / embedding

@@ -8,8 +8,6 @@ measured (not assumed) by the roofline harness.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -7,8 +7,6 @@ Pallas kernel when cfg.use_flash_kernel on the TPU target).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

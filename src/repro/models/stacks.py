@@ -12,7 +12,7 @@ input; every application still gets its own KV cache.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ rescaling stage — see per_component.py.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -15,12 +15,12 @@ quadratic-loss case (Eqs. 9-10).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.optim.optimizers import Optimizer, _sched
+from repro.optim.optimizers import Optimizer
 from repro.utils import tree as tu
 
 PyTree = Any

@@ -27,8 +27,6 @@ class ServeCaches(NamedTuple):
 
 
 def build_prefill_step(model: Model, num_clients: int, max_len: int) -> Callable:
-    M = num_clients
-
     def prefill_step(params, inputs):
         """inputs: {tokens: [M,b,S], ...} -> (last-token logits [M*b,1,V], caches)."""
         smashed, tcache = jax.vmap(

@@ -44,6 +44,17 @@ batches, round total conserved); `TrainConfig.batch_per_client` must then
 be set to the nominal per-step batch so the loop can apportion sizes, and
 `batches` must yield padded rounds (`schedule.padded_batch_per_client`).
 
+Edge topology & simulated wall-clock (core/topology.py): set
+`TrainConfig.topology` to an explicit client/server/link graph (star,
+clustered, hierarchical, multi_server) and every round's traffic — the
+algorithm's `round_events` — is billed on it: history entries carry
+"sim_time", the cumulative simulated seconds combining per-client compute
+(capability x local steps x microbatch, `time_per_sample_s`) with per-link
+transfer time (bytes/bandwidth + latency; max over parallel paths, sum
+over serial phases). A topology carrying an explicit capability profile
+overrides the schedule's drawn one. The trajectory itself is unchanged —
+the topology is a simulation overlay.
+
 Checkpoint/resume: pass `init_state=` (a state restored via
 `load_algorithm_state`) and `start_round=` (the checkpoint's "round"
 extra) to continue a run mid-stream — the schedule stream, step keys, and
@@ -64,13 +75,21 @@ from typing import Callable, Optional
 
 import jax
 
-from repro.core.algorithms import HParams, get_algorithm, jit_round_fn, num_rounds
+from repro.core import comm_cost
+from repro.core.algorithms import (
+    HParams,
+    get_algorithm,
+    jit_round_fn,
+    num_rounds,
+    simulate_round_walltime,
+)
 from repro.core.schedule import (
     ScheduleConfig,
     capability_profile,
     full_schedule,
     schedule_stream,
 )
+from repro.core.topology import Topology
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.optim.per_component import ComponentLR
@@ -90,6 +109,9 @@ class TrainConfig:
     checkpoint_every: int = 0  # in rounds
     microbatches: int = 1
     seed: int = 0
+    # DEPRECATED per-algorithm knobs: prefer hp_overrides (the launcher's
+    # registry-driven --hp path). Still honored, with hp_overrides winning
+    # when both set the same HParams field.
     prox_mu: float = 0.01  # fedprox proximal strength
     momentum: float = 0.9  # smofi server-side momentum
     num_clusters: int = 2  # parallelsfl cluster count
@@ -103,6 +125,19 @@ class TrainConfig:
     # nominal per-step batch per client; required when
     # schedule.capability_batching is on (sizes are apportioned from it)
     batch_per_client: Optional[int] = None
+    # explicit edge deployment graph (core/topology.py). When set, the loop
+    # bills each round's TrafficEvents on it and history entries carry
+    # "sim_time" — the cumulative SIMULATED wall-clock (per-client compute
+    # + per-link transfer, see topology.round_walltime). A topology with an
+    # explicit capability profile also overrides the schedule's drawn one.
+    # The training math itself is unchanged (the topology is a simulation
+    # overlay for placement, billing, and the clock).
+    topology: Optional[Topology] = None
+    # simulated seconds of client compute per sample at capability 1.0
+    time_per_sample_s: float = 1e-3
+    # registry-driven HParams overrides (the launcher's --hp key=value
+    # group); applied over the HParams assembled from the fields above
+    hp_overrides: dict = field(default_factory=dict)
 
 
 def train(
@@ -132,12 +167,15 @@ def train(
             "ScheduleConfig.capability_batching needs "
             "TrainConfig.batch_per_client (the nominal per-step batch) to "
             "apportion per-client microbatch sizes")
-    cap = capability_profile(num_clients, scfg)
+    cap = capability_profile(num_clients, scfg, tcfg.topology)
     hp = HParams(lr=tcfg.lr, local_steps=tcfg.local_steps,
                  optimizer=optimizer, component_lr=component_lr,
                  microbatches=tcfg.microbatches, prox_mu=tcfg.prox_mu,
                  momentum=tcfg.momentum, num_clusters=tcfg.num_clusters,
+                 sample_weighted=scfg.sample_weighted,
                  capability=None if scfg.is_trivial else tuple(cap))
+    if tcfg.hp_overrides:
+        hp = hp.with_updates(**tcfg.hp_overrides)
     spr = alg.steps_per_round(hp)
     rounds = num_rounds(tcfg.steps, spr)
     if rounds * spr != tcfg.steps:
@@ -167,14 +205,37 @@ def train(
         sched_iter = schedule_stream(scfg, num_clients, spr,
                                      tcfg.batch_per_client, start_round)
 
+    # simulated wall-clock (core/topology.py): bill each round's traffic
+    # events on the explicit deployment graph and accumulate the simulated
+    # clock (counted from THIS train() call) alongside the real one
+    topo = tcfg.topology
+    round_sim_s = None
+    if topo is not None:
+        if topo.capability is None:
+            topo = topo.with_capability(cap)
+        tower_p, total_p = comm_cost.model_param_counts(model)
+
+        def round_sim_s(r, batch, sched):
+            # per-step row width as generated (padded under capability
+            # batching; sizes then carry the true per-client sample counts)
+            b = jax.tree.leaves(batch)[0].shape[1] // spr
+            return simulate_round_walltime(
+                alg, topo, model.cfg, num_clients, b, hp, sched,
+                tower_params=tower_p, total_params=total_p,
+                time_per_sample_s=tcfg.time_per_sample_s,
+                round_idx=r, local_steps=spr)
+
     history = []
     t0 = time.time()
+    sim_time = 0.0
 
     def _sink(p):
         entry = {"step": p["step"], "round": p["round"],
                  "loss": float(p["metrics"]["loss"]),
                  "time": p["time"],
                  "participants": p["participants"]}
+        if "sim_time" in p:
+            entry["sim_time"] = p["sim_time"]
         if "eval" in p:
             entry["acc_mtl"] = float(p["eval"].get("acc_mtl", float("nan")))
         history.append(entry)
@@ -192,6 +253,8 @@ def train(
         r = start_round + i + 1  # absolute 1-based round index
         state, metrics = round_fn(state, batch, sched)
         rounds_done = r
+        if round_sim_s is not None:
+            sim_time += round_sim_s(r, batch, sched)
         # log_every=0 disables the periodic cadence (first/last still log),
         # mirroring eval_every=0 — and never divides by zero. The
         # unconditional first-round log belongs to FRESH runs only: a
@@ -209,6 +272,8 @@ def train(
             payload = {"metrics": metrics, "step": r * spr, "round": r,
                        "participants": sched.num_participants,
                        "time": time.time() - t0, "do_log": do_log}
+            if round_sim_s is not None:
+                payload["sim_time"] = sim_time
             if do_eval:
                 payload["eval"] = eval_fn(state, next(eval_iter))
             ring.push(payload)

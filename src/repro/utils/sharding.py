@@ -13,11 +13,9 @@ otherwise it is replicated (e.g. 8 KV heads on a 16-way model axis).
 """
 from __future__ import annotations
 
-import re
 from typing import Any, Optional, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any

@@ -16,7 +16,7 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks import fig5_participation, throughput
+from benchmarks import fig5_participation, throughput, time_to_accuracy
 
 
 @pytest.mark.slow
@@ -62,3 +62,26 @@ def test_throughput_benchmark_quick_end_to_end(tmp_path):
     assert straggle
     assert d["claims"]["prefetch_wins"] == any(
         r["speedup"] > 1.02 for r in straggle)
+
+
+@pytest.mark.slow
+def test_time_to_accuracy_quick_end_to_end(tmp_path):
+    """The acceptance-criterion artifact: simulated wall-clock-to-target for
+    mtsl vs fedavg vs parallelsfl under an asymmetric-link cell."""
+    path = tmp_path / "tta.json"
+    rows = time_to_accuracy.run(quick=True, json_path=str(path))
+    assert rows and all(len(r) == 3 for r in rows)
+    d = json.loads(path.read_text())
+    assert d["benchmark"] == "time_to_accuracy"
+    cells = d["cells"]
+    # quick mode: 2 cells (slow_uplink, stragglers) x 3 algorithms
+    assert {c["cell"] for c in cells} == {"slow_uplink", "stragglers"}
+    assert {c["algorithm"] for c in cells} == {"mtsl", "fedavg",
+                                               "parallelsfl"}
+    for c in cells:
+        assert c["total_sim_s"] > 0
+        assert 0.0 <= c["acc_mtl"] <= 1.0
+        # sim-to-target is either unreached (None) or within the run's total
+        if c["sim_s_to_target"] is not None:
+            assert 0 < c["sim_s_to_target"] <= c["total_sim_s"] + 1e-9
+    assert d["claims"]["sim_clock_emitted"] is True

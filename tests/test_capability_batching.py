@@ -51,7 +51,7 @@ from repro.train.loop import TrainConfig, train
 
 
 def test_capability_batch_sizes_properties():
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=200, deadline=None)
@@ -163,7 +163,7 @@ def test_round_schedule_capability_batching():
 
 
 def test_comm_cost_bytes_equal_sum_of_transmitted_activations():
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     cfg = get_config("paper-mlp", smoke=True)

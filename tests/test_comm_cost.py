@@ -7,7 +7,6 @@ configs with odd spatial sizes (the stride-2 SAME convs CEIL-divide the
 resolution — a floor-division formula undercounts).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -3,12 +3,11 @@ assigned family runs one forward AND one MTSL train step on CPU, asserting
 output shapes and no NaNs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from conftest import ASSIGNED_ARCHS
 from repro.configs import get_config
-from repro.core.mtsl import TrainState, build_train_step, init_state, make_loss_fn
+from repro.core.mtsl import TrainState, build_train_step, init_state
 from repro.models import build_model
 from repro.optim import sgd
 from repro.utils.sharding import strip

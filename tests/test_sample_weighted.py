@@ -1,0 +1,232 @@
+"""Sample-weighted federation means (ROADMAP open item).
+
+`participation_mean(x, mask, weights=)` weights each participant by its
+transmitted sample count, classic-FedAvg-style; the FedAvg-family round
+builders consume `schedule.sizes` behind `ScheduleConfig.sample_weighted`
+(threaded as `HParams.sample_weighted`). The load-bearing property: the
+weight vector is normalized by its LARGEST participant weight before the
+reduction, so UNIFORM sizes reproduce the unweighted trajectory
+BIT-FOR-BIT (s/s == 1.0 and 0*s/s == 0.0 exactly in IEEE arithmetic) —
+turning the flag on can only change runs whose sizes actually differ.
+"""
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.configs import get_config
+from repro.core import federation
+from repro.core.schedule import (
+    ClientSchedule,
+    ScheduleConfig,
+    participation_bcast_mean,
+    participation_mean,
+)
+from repro.data.pipeline import client_batches
+from repro.data.synthetic import MultiTaskImageSource
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.loop import TrainConfig, train
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# the mean itself
+# ---------------------------------------------------------------------------
+
+
+def test_weights_none_is_plain_participation_mean():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+    np.testing.assert_array_equal(
+        np.asarray(participation_mean(x, mask)),
+        np.asarray(participation_mean(x, mask, None)))
+
+
+@pytest.mark.parametrize("s", [1.0, 3.0, 7.0, 16.0, 0.3])
+def test_uniform_weights_bitwise_equal_unweighted(s):
+    """ANY uniform weight value (power of two or not) must be a bitwise
+    no-op — that is what makes enabling the flag safe by default."""
+    rng = np.random.default_rng(42)
+    for _ in range(20):
+        m = rng.integers(2, 9)
+        x = jnp.asarray(rng.normal(size=(m, 4)).astype(np.float32) * 100)
+        mask = jnp.asarray((rng.random(m) < 0.6).astype(np.float32))
+        w = jnp.full((m,), s, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(participation_mean(x, mask)),
+            np.asarray(participation_mean(x, mask, w)))
+        np.testing.assert_array_equal(
+            np.asarray(participation_bcast_mean(x, mask)),
+            np.asarray(participation_bcast_mean(x, mask, w)))
+
+
+def test_weighted_mean_matches_numpy_reference():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(6, 3)).astype(np.float32)
+    mask = np.array([1, 1, 0, 1, 1, 0], np.float32)
+    sizes = np.array([8, 4, 16, 2, 1, 5], np.float32)
+    got = np.asarray(participation_mean(
+        jnp.asarray(x), jnp.asarray(mask), jnp.asarray(sizes)))
+    w = mask * sizes
+    want = (x * w[:, None]).sum(0) / w.sum()
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # masked clients are ignored exactly: perturbing one changes nothing
+    x2 = x.copy()
+    x2[2] += 1e6
+    got2 = np.asarray(participation_mean(
+        jnp.asarray(x2), jnp.asarray(mask), jnp.asarray(sizes)))
+    np.testing.assert_array_equal(got, got2)
+
+
+def test_all_masked_weighted_mean_is_zero():
+    x = jnp.ones((3, 2))
+    mask = jnp.zeros((3,))
+    w = jnp.asarray([5.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(participation_mean(x, mask, w)),
+                                  np.zeros(2))
+
+
+def test_uniform_weights_bitwise_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(2, 8), st.floats(0.01, 64.0), st.integers(0, 2**31 - 1))
+    def check(m, s, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, 3)).astype(np.float32))
+        mask = jnp.asarray((rng.random(m) < 0.5).astype(np.float32))
+        w = jnp.full((m,), np.float32(s))
+        np.testing.assert_array_equal(
+            np.asarray(participation_mean(x, mask)),
+            np.asarray(participation_mean(x, mask, w)))
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# through the FedAvg-family round builders
+# ---------------------------------------------------------------------------
+
+
+def _setup(local_steps=2, b_pad=6):
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    src = MultiTaskImageSource(num_classes=M, image_size=cfg.image_size,
+                               channels=cfg.image_channels, alpha=0.0, seed=0)
+    batch = next(client_batches(src, local_steps * b_pad, steps=1, seed=0))
+    batch = jax.tree.map(
+        lambda x: x.reshape((M, local_steps, b_pad) + x.shape[2:]), batch)
+    params = federation.init_fedavg_params(model, jax.random.PRNGKey(0), M)
+    from repro.utils.sharding import strip
+
+    return cfg, model, M, strip(params), batch
+
+
+@pytest.mark.parametrize("alg_builder", [
+    lambda model, M, sw: federation.build_fedavg_round(
+        model, 0.1, M, 2, sample_weighted=sw),
+    lambda model, M, sw: federation.build_fedprox_round(
+        model, 0.1, M, 2, mu=0.05, sample_weighted=sw),
+])
+def test_uniform_sizes_trajectory_bitwise(alg_builder):
+    """sample_weighted=True with uniform sizes == sample_weighted=False,
+    bit for bit, through a full fedavg/fedprox round."""
+    cfg, model, M, params, batch = _setup()
+    sched = ClientSchedule(mask=jnp.ones((M,), jnp.float32),
+                           budget=jnp.full((M,), 2, jnp.int32),
+                           sizes=jnp.full((M,), 6, jnp.int32))
+    off = alg_builder(model, M, False)(params, batch, sched)
+    on = alg_builder(model, M, True)(params, batch, sched)
+    assert _leaves_equal(off[0], on[0])
+
+
+def test_nonuniform_sizes_weight_the_round_average():
+    """With heterogeneous sizes the federated params are the sample-count-
+    weighted mean of the per-client results (verified against an explicit
+    per-client recomputation), not the plain mean."""
+    cfg, model, M, params, batch = _setup()
+    sizes = np.array([6, 3, 1][:M], np.int64)
+    sched = ClientSchedule(mask=jnp.ones((M,), jnp.float32),
+                           budget=jnp.full((M,), 2, jnp.int32),
+                           sizes=jnp.asarray(sizes, jnp.int32))
+    plain = federation.build_fedavg_round(model, 0.1, M, 2)(
+        params, batch, sched)[0]
+    weighted = federation.build_fedavg_round(
+        model, 0.1, M, 2, sample_weighted=True)(params, batch, sched)[0]
+    assert not _leaves_equal(plain, weighted)
+
+    # recompute the expected weighted average from the PLAIN round's
+    # pre-federation client params: run each client alone (mask out the
+    # others) and average with numpy
+    per_client = []
+    for m in range(M):
+        mask = np.zeros(M, np.float32)
+        mask[m] = 1.0
+        solo = federation.build_fedavg_round(model, 0.1, M, 2)(
+            params, batch,
+            ClientSchedule(mask=jnp.asarray(mask),
+                           budget=jnp.full((M,), 2, jnp.int32),
+                           sizes=jnp.asarray(sizes, jnp.int32)))[0]
+        # every row of a solo round's federated output is client m's params
+        per_client.append(jax.tree.map(lambda x: np.asarray(x)[m], solo))
+    w = sizes / sizes.sum()
+
+    def expect(*rows):
+        return sum(wi * r for wi, r in zip(w, rows))
+
+    want = jax.tree.map(expect, *per_client)
+    got_first = jax.tree.map(lambda x: np.asarray(x)[0], weighted)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got_first)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+
+def test_sizes_none_with_flag_on_is_bitwise_noop():
+    cfg, model, M, params, batch = _setup()
+    sched = ClientSchedule(mask=jnp.ones((M,), jnp.float32),
+                           budget=jnp.full((M,), 2, jnp.int32))
+    off = federation.build_fedavg_round(model, 0.1, M, 2)(
+        params, batch, sched)
+    on = federation.build_fedavg_round(model, 0.1, M, 2,
+                                       sample_weighted=True)(
+        params, batch, sched)
+    assert _leaves_equal(off[0], on[0])
+
+
+def test_loop_threads_sample_weighted_from_schedule_config():
+    """End-to-end: capability batching with a UNIFORM fleet produces uniform
+    sizes, so sample_weighted on/off trajectories are bit-identical; the
+    flag rides ScheduleConfig -> HParams.sample_weighted."""
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    src = MultiTaskImageSource(num_classes=M, image_size=cfg.image_size,
+                               channels=cfg.image_channels, alpha=0.0, seed=0)
+
+    def go(sample_weighted):
+        scfg = ScheduleConfig(capability_batching=True,
+                              sample_weighted=sample_weighted, seed=5)
+        from repro.core.schedule import padded_batch_per_client
+
+        tcfg = TrainConfig(steps=4, algorithm="fedavg", lr=0.1,
+                           local_steps=2, log_every=1, schedule=scfg,
+                           batch_per_client=4, prefetch=0)
+        batches = client_batches(src, padded_batch_per_client(scfg, 4) * 2,
+                                 steps=2, seed=0)
+        _, h = train(model, sgd(0.1), batches, tcfg, M, log=lambda s: None)
+        return [e["loss"] for e in h]
+
+    assert go(False) == go(True)

@@ -110,7 +110,7 @@ def test_step_activity_combines_mask_and_budget():
 
 
 def test_participation_mean_matches_subset_mean():
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=50, deadline=None)

@@ -1,8 +1,6 @@
 """Convergence theory (paper §3) and synthetic-data behaviour."""
 import numpy as np
-import pytest
-
-from repro.core.theory import LinearMTSL, paper_fig2_setup
+from repro.core.theory import paper_fig2_setup
 from repro.data.lm import MultiTaskLMSource
 from repro.data.synthetic import MultiTaskImageSource
 

@@ -1,0 +1,413 @@
+"""Edge Topology API (core/topology.py) + event-based comm accounting.
+
+The redesign's defining constraint: star(M) with ideal (infinite-bandwidth,
+zero-latency) links must reproduce the PRE-redesign analytic byte counts
+exactly for all seven registered algorithms. `_legacy_cost` below is a
+verbatim transcription of the retired hand-derived formulas (PR 2's
+core/comm_cost.py); the goldens pin the event fold against it across the
+mlp / resnet / encdec config families and the participation /
+capability-batching kwargs.
+
+Also covered: the Algorithm registry's round_events <-> round_bytes
+consistency, the topology constructors' graph shapes, and the
+round_walltime model's two limiting regimes (infinite bandwidth =>
+compute-bound; equal capabilities + pure-latency links => walltime ordered
+by serial phase count).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import comm_cost
+from repro.core.algorithms import HParams, get_algorithm, list_algorithms
+from repro.core.federation import cluster_assignment
+from repro.core.schedule import ScheduleConfig, capability_profile
+from repro.core.topology import (
+    INF,
+    Link,
+    Topology,
+    TrafficEvent,
+    build_topology,
+    client_compute_seconds,
+    clustered,
+    hierarchical,
+    mbps,
+    multi_server,
+    round_walltime,
+    star,
+)
+
+ALL_ALGS = ("mtsl", "splitfed", "fedavg", "fedprox", "fedem", "smofi",
+            "parallelsfl")
+FAMILIES = ["paper-mlp", "paper-resnet16", "whisper-tiny"]
+TOWER, TOTAL = 1000, 4321
+
+
+def _legacy_cost(algorithm, cfg, M, b, *, seq_len=1, tower_params=None,
+                 total_params=None, server_params=None, num_components=3,
+                 local_steps=1, num_clusters=2, num_participants=None,
+                 samples_per_step=None, bytes_per_elem=4, label_bytes=4):
+    """The pre-redesign hand-derived formulas, transcribed verbatim."""
+    P = M if num_participants is None else max(1, min(num_participants, M))
+    s1 = comm_cost._smashed_elems(cfg, 1, seq_len) * bytes_per_elem
+    lab1 = max(seq_len, 1) * label_bytes
+    S = (P * b if samples_per_step is None else max(int(samples_per_step), 0))
+    smash_up, smash_down = S * (s1 + lab1), S * s1
+    if algorithm == "mtsl":
+        return smash_up, smash_down
+    if algorithm == "splitfed":
+        fed = P * tower_params * bytes_per_elem
+        return smash_up + fed, smash_down + fed
+    if algorithm in ("fedavg", "fedprox"):
+        fed = P * total_params * bytes_per_elem
+        return fed, fed
+    if algorithm == "fedem":
+        fed = num_components * P * total_params * bytes_per_elem
+        return fed, fed
+    if algorithm == "smofi":
+        fed = P * tower_params * bytes_per_elem
+        return (local_steps * smash_up + fed, local_steps * smash_down + fed)
+    if algorithm == "parallelsfl":
+        C = max(1, min(num_clusters, M))
+        fed = (P * tower_params * bytes_per_elem
+               + C * server_params * bytes_per_elem)
+        return (local_steps * smash_up + fed, local_steps * smash_down + fed)
+    raise ValueError(algorithm)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("alg", ALL_ALGS)
+@pytest.mark.parametrize("P,sps,k,C", [
+    (None, None, 1, 2),
+    (2, None, 4, 2),
+    (None, 7, 4, 3),
+    (1, 0, 2, 1),
+])
+def test_star_shim_reproduces_legacy_analytic_bytes(arch, alg, P, sps, k, C):
+    """round_cost(algorithm=...) — now a fold of TrafficEvents on star(M)
+    — must equal the retired analytic formulas EXACTLY (ints, not approx)."""
+    cfg = get_config(arch, smoke=True)
+    M, b = cfg.num_clients, 8
+    kw = dict(tower_params=TOWER, total_params=TOTAL,
+              server_params=TOTAL - TOWER, local_steps=k, num_clusters=C,
+              num_participants=P, samples_per_step=sps, seq_len=5)
+    got = comm_cost.round_cost(alg, cfg, M, b, **kw)
+    # the legacy branches composed local steps themselves for the
+    # one-exchange algorithms — only smofi/parallelsfl consumed local_steps
+    legacy_k = k if alg in ("smofi", "parallelsfl") else 1
+    want_up, want_down = _legacy_cost(
+        alg, cfg, M, b, seq_len=5, tower_params=TOWER, total_params=TOTAL,
+        server_params=TOTAL - TOWER, local_steps=legacy_k, num_clusters=C,
+        num_participants=P, samples_per_step=sps)
+    assert (got.up_bytes, got.down_bytes) == (want_up, want_down)
+    assert got.peer_bytes == 0  # star has one server: nothing peer-tier
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("alg", ALL_ALGS)
+def test_round_events_and_round_bytes_agree(arch, alg):
+    """Every registration's byte total IS the fold of its own events on
+    star(M) — the two views of an algorithm's traffic cannot diverge."""
+    cfg = get_config(arch, smoke=True)
+    M, b = cfg.num_clients, 16
+    a = get_algorithm(alg)
+    hp = HParams(lr=0.1, local_steps=4, num_clusters=2)
+    topo = star(M)
+    assert a.round_events is not None
+    for P, sps in [(None, None), (2, None), (M, M * 3)]:
+        events = a.round_events(topo, cfg, M, b, hp, tower_params=TOWER,
+                                total_params=TOTAL, num_participants=P,
+                                samples_per_step=sps)
+        total = comm_cost.round_cost_from_events(topo, events).total
+        assert total == a.round_bytes(cfg, M, b, hp, tower_params=TOWER,
+                                      total_params=TOTAL, num_participants=P,
+                                      samples_per_step=sps)
+
+
+def test_registry_lists_all_seven():
+    assert set(ALL_ALGS) <= set(list_algorithms())
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+
+def test_star_shape():
+    t = star(5)
+    assert t.num_clients == 5 and t.num_servers == 1
+    assert all(t.server_of(m) == "server0" for m in range(5))
+    assert t.link("client0", "server0") == Link()
+    # pairs the topology does not separate ride the ideal default link
+    assert t.link("replica0", "merge_hub").bandwidth_bytes_per_s == INF
+
+
+def test_clustered_matches_cluster_assignment_round_robin():
+    M, C = 7, 3
+    t = clustered(M, C)
+    cidx, c = cluster_assignment(M, C)
+    assert c == t.num_servers
+    assert tuple(cidx) == t.attach
+    assert t.core == "core"
+    assert t.link("server1", "core") == Link()
+
+
+def test_hierarchical_contiguous_blocks():
+    t = hierarchical(6, 2)
+    assert t.attach == (0, 0, 0, 1, 1, 1)
+    assert t.core == "cloud"
+
+
+def test_multi_server_nearest_attachment():
+    t = multi_server(6, 2)
+    assert t.attach == (0, 0, 0, 1, 1, 1)
+    assert t.link("server0", "server1") == Link()
+    assert t.core is None
+    t2 = multi_server(6, 3, sync_every=5)
+    assert t2.sync_every == 5
+    assert t2.attach == (0, 0, 1, 1, 2, 2)
+
+
+def test_build_topology_by_name():
+    for kind in ("star", "clustered", "hierarchical", "multi-server"):
+        t = build_topology(kind, 4, num_servers=2)
+        assert t.num_clients == 4
+    with pytest.raises(ValueError):
+        build_topology("mesh", 4)
+
+
+def test_capability_validation_and_profile_override():
+    with pytest.raises(ValueError):
+        star(3, capability=(1.0, 0.5))  # wrong length
+    topo = star(3, capability=(1.0, 0.5, 0.25))
+    scfg = ScheduleConfig(straggler_frac=0.9, seed=1)
+    # the topology's explicit profile is the source of truth
+    assert np.allclose(capability_profile(3, scfg, topo), [1.0, 0.5, 0.25])
+    # an unspecified profile defers to the schedule config's draw
+    drawn = capability_profile(3, scfg, star(3))
+    assert drawn.shape == (3,) and (drawn <= 1.0).all()
+    with pytest.raises(ValueError):
+        capability_profile(4, scfg, topo)  # M mismatch
+
+
+def test_mbps_helper():
+    link = mbps(8.0, 0.25)  # 8 Mbit/s == 1e6 bytes/s
+    assert link.bandwidth_bytes_per_s == 1e6
+    assert link.transfer_s(1_000_000) == pytest.approx(1.25)
+    assert mbps(0.0).bandwidth_bytes_per_s == INF
+    assert Link().transfer_s(0) == 0.0  # no bytes, no latency paid
+
+
+# ---------------------------------------------------------------------------
+# round_walltime
+# ---------------------------------------------------------------------------
+
+
+def test_walltime_infinite_bandwidth_is_compute_bound():
+    """Ideal links: the round costs exactly the slowest client's compute."""
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    topo = star(M, capability=tuple(np.linspace(0.25, 1.0, M)))
+    events = comm_cost.traffic_events("mtsl", topo, cfg, M, 8)
+    comp = client_compute_seconds(topo, local_steps=1, samples_per_step=8,
+                                  time_per_sample_s=1e-3)
+    wall = round_walltime(topo, events, compute_s=comp)
+    assert wall == pytest.approx(comp.max())
+    # the slowest (capability 0.25) client dominates: 8 samples / 0.25
+    assert wall == pytest.approx(8 * 1e-3 / 0.25)
+
+
+def test_walltime_zero_capability_spread_is_latency_ordered():
+    """Equal capabilities + pure-latency links: walltime is latency x the
+    number of serial phases, so the split algorithms' chattier rounds are
+    strictly slower per round than one-shot federation."""
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    L = 0.1
+    lat = Link(INF, L)
+    topo = star(M, uplink=lat, downlink=lat)  # zero capability spread
+    kw = dict(tower_params=TOWER, total_params=TOTAL,
+              server_params=TOTAL - TOWER)
+
+    def wall(alg, k):
+        ev = comm_cost.traffic_events(alg, topo, cfg, M, 8, local_steps=k,
+                                      **kw)
+        return round_walltime(topo, ev)
+
+    assert wall("mtsl", 1) == pytest.approx(2 * L)      # up, down
+    assert wall("fedavg", 1) == pytest.approx(2 * L)    # one param exchange
+    k = 3
+    assert wall("splitfed", k) == pytest.approx((2 * k + 2) * L)
+    assert wall("smofi", k) == pytest.approx((2 * k + 2) * L)
+    # parallelsfl's replica merge rides virtual (ideal) links on star:
+    # bytes are billed, no latency is paid
+    assert wall("parallelsfl", k) == pytest.approx((2 * k + 2) * L)
+    # the latency-dominated ordering: chatty split rounds > one-shot rounds
+    assert wall("splitfed", k) > wall("fedavg", 1) == wall("mtsl", 1)
+
+
+def test_walltime_parallel_max_serial_sum():
+    topo = Topology(name="t", clients=("a", "b"), servers=("s",),
+                    links={("a", "s"): Link(1e6, 0.5),
+                           ("b", "s"): Link(2e6, 0.0),
+                           ("s", "a"): Link(1e6, 0.0)})
+    events = [
+        TrafficEvent("a", "s", 1_000_000, phase=0),  # 1.0 + 0.5 = 1.5s
+        TrafficEvent("b", "s", 1_000_000, phase=0),  # 0.5s (parallel)
+        TrafficEvent("s", "a", 500_000, phase=1, direction="down"),  # 0.5s
+    ]
+    assert round_walltime(topo, events) == pytest.approx(1.5 + 0.5)
+    # compute is one more serial phase
+    assert round_walltime(topo, events, compute_s=[0.25, 2.0]) == \
+        pytest.approx(2.0 + 1.5 + 0.5)
+
+
+def test_walltime_respects_schedule_mask_and_sizes():
+    topo = star(4, capability=(1.0, 0.5, 1.0, 1.0))
+    comp = client_compute_seconds(
+        topo, local_steps=4, samples_per_step=8, time_per_sample_s=1e-3,
+        mask=np.array([1, 1, 0, 1.0]), budget=np.array([4, 2, 4, 4]),
+        sizes=np.array([8, 4, 8, 8]))
+    # client 2 is masked out entirely
+    assert comp[2] == 0.0
+    # the straggler (cap 0.5) runs 2 steps x 4 samples / 0.5
+    assert comp[1] == pytest.approx(2 * 4 * 1e-3 / 0.5)
+    assert comp[0] == pytest.approx(4 * 8 * 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# multi-server traffic: the new MTSL scenario
+# ---------------------------------------------------------------------------
+
+
+def test_multi_server_sync_billed_as_peer_traffic():
+    cfg = get_config("paper-mlp", smoke=True)
+    M, S = cfg.num_clients, 2
+    topo = multi_server(M, S, backbone=mbps(8.0))
+    ev = comm_cost.traffic_events("mtsl", topo, cfg, M, 8,
+                                  server_params=TOTAL - TOWER)
+    cost = comm_cost.round_cost_from_events(topo, ev)
+    base = comm_cost.round_cost("mtsl", cfg, M, 8)
+    # access traffic unchanged; replica sync appears as peer bytes
+    assert (cost.up_bytes, cost.down_bytes) == (base.up_bytes,
+                                                base.down_bytes)
+    assert cost.peer_bytes == S * (S - 1) * (TOTAL - TOWER) * 4
+    # off-sync rounds skip the peer exchange entirely
+    ev_off = comm_cost.traffic_events("mtsl", topo, cfg, M, 8,
+                                      server_params=TOTAL - TOWER,
+                                      sync_round=False)
+    assert comm_cost.round_cost_from_events(topo, ev_off).peer_bytes == 0
+    # a missing server_params on a multi-server graph is an error, not a
+    # silent undercount
+    with pytest.raises(ValueError):
+        comm_cost.traffic_events("mtsl", topo, cfg, M, 8)
+
+
+def test_clustered_parallelsfl_merge_rides_real_backbone():
+    cfg = get_config("paper-mlp", smoke=True)
+    M, C = cfg.num_clients, 2
+    sp = TOTAL - TOWER
+    topo = clustered(M, C, backbone=Link(1e6, 0.0))
+    ev = comm_cost.traffic_events("parallelsfl", topo, cfg, M, 8,
+                                  tower_params=TOWER, total_params=TOTAL,
+                                  local_steps=1, num_clusters=C)
+    # byte totals match the star accounting exactly...
+    want = comm_cost.round_cost("parallelsfl", cfg, M, 8,
+                                tower_params=TOWER, server_params=sp,
+                                local_steps=1, num_clusters=C)
+    got = comm_cost.round_cost_from_events(topo, ev)
+    assert (got.up_bytes, got.down_bytes) == (want.up_bytes, want.down_bytes)
+    # ...but the merge now costs real transfer time over the backbone
+    merge_s = 2 * (sp * 4 / 1e6)  # up to core + back down, serial phases
+    assert round_walltime(topo, ev) == pytest.approx(merge_s)
+
+
+def test_multi_server_parallelsfl_merge_rides_real_peer_backbone():
+    """When the replicas map onto a coreless peer graph's real servers
+    (multi_server with S == num_clusters), the merge is routed pairwise
+    over the DECLARED backbone — it must pay transfer time, not ride a
+    fictitious ideal hub."""
+    cfg = get_config("paper-mlp", smoke=True)
+    M, C = cfg.num_clients, 2
+    sp = TOTAL - TOWER
+    topo = multi_server(M, C, backbone=Link(1e6, 0.0))
+    ev = comm_cost.traffic_events("parallelsfl", topo, cfg, M, 8,
+                                  tower_params=TOWER, total_params=TOTAL,
+                                  local_steps=1, num_clusters=C)
+    cost = comm_cost.round_cost_from_events(topo, ev)
+    # pairwise peer sync: C*(C-1) transfers of the server replica
+    assert cost.peer_bytes == C * (C - 1) * sp * 4
+    # ...and they ride the real 1e6 B/s links: one parallel peer phase
+    assert round_walltime(topo, ev) == pytest.approx(sp * 4 / 1e6)
+    # the degenerate C == 1 merge keeps the legacy hub billing (2*sp, free)
+    t1 = multi_server(M, 1, backbone=Link(1e6, 0.0))
+    ev1 = comm_cost.traffic_events("parallelsfl", t1, cfg, M, 8,
+                                   tower_params=TOWER, total_params=TOTAL,
+                                   local_steps=1, num_clusters=1)
+    c1 = comm_cost.round_cost_from_events(t1, ev1)
+    legacy = comm_cost.round_cost("parallelsfl", cfg, M, 8,
+                                  tower_params=TOWER, server_params=sp,
+                                  local_steps=1, num_clusters=1)
+    assert (c1.up_bytes, c1.down_bytes) == (legacy.up_bytes,
+                                            legacy.down_bytes)
+
+
+# ---------------------------------------------------------------------------
+# train-loop integration: the topology is a simulation overlay
+# ---------------------------------------------------------------------------
+
+
+def _loop_run(topo, algorithm="mtsl", steps=3, local_steps=1, sync_every=1):
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from repro.data.pipeline import client_batches
+    from repro.data.synthetic import MultiTaskImageSource
+    from repro.models import build_model
+    from repro.optim import sgd
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    src = MultiTaskImageSource(num_classes=M, image_size=cfg.image_size,
+                               channels=cfg.image_channels, alpha=0.0,
+                               seed=0)
+    alg = get_algorithm(algorithm)
+    spr = alg.steps_per_round(HParams(local_steps=local_steps))
+    tcfg = TrainConfig(steps=steps * spr, algorithm=algorithm, lr=0.1,
+                       local_steps=local_steps, log_every=1, prefetch=0,
+                       topology=topo)
+    batches = client_batches(src, 8 * spr, steps=steps, seed=0)
+    _, h = train(model, sgd(0.1), batches, tcfg, M, log=lambda s: None)
+    return h
+
+
+def test_loop_topology_is_pure_overlay_with_monotone_sim_clock():
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    base = _loop_run(None)
+    simmed = _loop_run(star(M, uplink=mbps(1.0, 0.01)))
+    assert [e["loss"] for e in base] == [e["loss"] for e in simmed]
+    assert "sim_time" not in base[0]
+    times = [e["sim_time"] for e in simmed]
+    assert all(t > 0 for t in times)
+    assert times == sorted(times)
+    # each round adds the same walltime under a trivial schedule
+    deltas = np.diff([0.0] + times)
+    np.testing.assert_allclose(deltas, deltas[0])
+
+
+def test_loop_multi_server_sync_every_amortizes_peer_traffic():
+    cfg = get_config("paper-mlp", smoke=True)
+    M = cfg.num_clients
+    slow_backbone = mbps(0.008)  # 1000 bytes/s: sync rounds visibly dearer
+    every = _loop_run(multi_server(M, 2, backbone=slow_backbone,
+                                   sync_every=1), steps=4)
+    sparse = _loop_run(multi_server(M, 2, backbone=slow_backbone,
+                                    sync_every=4), steps=4)
+    # only round 4 pays the backbone in the sparse run
+    assert sparse[-1]["sim_time"] < every[-1]["sim_time"]
+    d_sparse = np.diff([0.0] + [e["sim_time"] for e in sparse])
+    assert d_sparse[-1] > d_sparse[0]  # the sync round is the dear one
