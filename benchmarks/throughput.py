@@ -188,7 +188,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="longer runs (steadier numbers)")
-    ap.add_argument("--json", default=None)
+    ap.add_argument("--json", default="BENCH_throughput.json",
+                    help="JSON artifact path (uniform BENCH_* default)")
     args = ap.parse_args(argv)
     # run() configures the compilation cache itself (CI dir or a local one)
     run(quick=not args.full, json_path=args.json)

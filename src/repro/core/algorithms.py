@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm_cost, federation, lr_policy, topology
+from repro.core.client_axis import client_axis
 from repro.core.mtsl import (
     TrainState,
     build_eval_step,
@@ -79,7 +80,13 @@ from repro.core.mtsl import (
 from repro.core.split import replicate_tower
 from repro.optim.optimizers import Optimizer, sgd
 from repro.optim.per_component import ComponentLR
-from repro.utils.sharding import strip
+from repro.utils import tree as tree_util
+from repro.utils.sharding import (
+    client_axis_size,
+    client_sharding,
+    replicated_sharding,
+    strip,
+)
 
 PyTree = Any
 
@@ -117,6 +124,25 @@ class HParams:
 
 def _identity(state: PyTree) -> PyTree:
     return state
+
+
+def client_axes_by_keys(*keys: str):
+    """An `Algorithm.client_axes` declaration by state-tree key: a leaf is
+    marked client-sharded iff any component of its tree path (dict keys and
+    NamedTuple fields, "/"-joined by utils.tree.tree_map_with_path) matches
+    one of `keys`. E.g. `client_axes_by_keys("towers")` marks the tower
+    params AND the tower slices of a stateful optimizer's moments (both
+    live under a "towers" key), while the server and the step counter stay
+    replicated."""
+    keyset = frozenset(keys)
+
+    def marks(state: PyTree) -> PyTree:
+        return tree_util.tree_map_with_path(
+            lambda path, leaf: any(
+                part.lstrip(".") in keyset for part in path.split("/")),
+            state)
+
+    return marks
 
 
 @dataclass(frozen=True)
@@ -161,6 +187,14 @@ class Algorithm:
       donate_state: whether drivers may jit round_fn with
           donate_argnums=(0,) (buffer reuse across rounds). Set False for
           algorithms whose eval/serving must read the PRE-round state.
+      client_axes(state) -> bool pytree (same structure): True marks a
+          leaf whose LEADING axis is the client dimension [M, ...] — the
+          per-algorithm declaration `shard_round_fn` /
+          `place_algorithm_state` use to shard the state over the mesh's
+          client axes (everything else replicates). Declare with
+          `client_axes_by_keys(...)` for key-based states or a custom
+          callable (see fedem). None disables mesh sharding for the
+          algorithm (chunked scan still works).
     """
 
     name: str
@@ -175,6 +209,7 @@ class Algorithm:
     serve_params: Optional[Callable[[PyTree], PyTree]] = None
     uses_optimizer: bool = False
     donate_state: bool = True
+    client_axes: Optional[Callable[[PyTree], PyTree]] = None
     description: str = ""
 
 
@@ -202,6 +237,103 @@ def jit_round_fn(alg: "Algorithm", model, num_clients: int, hp: HParams):
     fn = alg.round_fn(model, num_clients, hp)
     donate = alg.donate_state and jax.default_backend() != "cpu"
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _constrain_marked(state, marks, cshard, rshard):
+    """with_sharding_constraint each leaf per its client-axis mark."""
+    return jax.tree.map(
+        lambda x, m: jax.lax.with_sharding_constraint(
+            x, cshard if m else rshard),
+        state, marks)
+
+
+def shard_round_fn(alg: "Algorithm", model, num_clients: int, hp: HParams,
+                   *, mesh=None, client_chunk: Optional[int] = None):
+    """`jit_round_fn` with the client axis treated as an execution
+    resource: optionally CHUNKED (scan-over-clients, flat compile/memory
+    vs M) and optionally SHARDED over `mesh`'s client axes (("pod",
+    "data"), utils/sharding.DEFAULT_RULES).
+
+    mesh=None, client_chunk=None is exactly `jit_round_fn` — the default
+    1-device path stays bit-for-bit identical to the seeded goldens.
+
+    With `client_chunk=c`, every per-client map in the round (the
+    `_vmap_with_smask` seam in core/federation.py, the mtsl loss in
+    core/mtsl.py) runs as a lax.scan over M/c client chunks: compiled
+    shapes are [c, ...] regardless of M. With `mesh`, the round runs under
+    GSPMD jit: inputs/outputs carry NamedShardings per the algorithm's
+    `client_axes` declaration (client leaves split over the client mesh
+    axes, the rest replicated) and cross-client reductions (federation
+    means, server-grad sums) lower to all-reduces. Requires M divisible by
+    the client-shard count D (and by `client_chunk`, which must itself be
+    a multiple of D so every device scans whole blocks).
+    """
+    if mesh is None and client_chunk is None:
+        return jit_round_fn(alg, model, num_clients, hp)
+    cshard = rshard = None
+    if mesh is not None:
+        if alg.client_axes is None:
+            raise ValueError(
+                f"algorithm {alg.name!r} declares no client_axes; cannot "
+                "shard its state over a mesh (client chunking without a "
+                "mesh still works)")
+        D = client_axis_size(mesh)
+        if num_clients % D:
+            raise ValueError(
+                f"num_clients {num_clients} not divisible by the mesh's "
+                f"client-shard count {D}")
+        if client_chunk is not None and client_chunk % D:
+            raise ValueError(
+                f"client_chunk {client_chunk} must be a multiple of the "
+                f"mesh's client-shard count {D} (each device scans whole "
+                f"blocks of {client_chunk // max(D, 1)} clients)")
+        cshard = client_sharding(mesh)
+        rshard = replicated_sharding(mesh)
+    if client_chunk is not None and num_clients % client_chunk:
+        raise ValueError(
+            f"num_clients {num_clients} not divisible by client_chunk "
+            f"{client_chunk}")
+
+    fn = alg.round_fn(model, num_clients, hp)
+
+    def wrapped(state, batch, schedule=None):
+        with client_axis(chunk=client_chunk, sharding=cshard):
+            if cshard is not None:
+                state = _constrain_marked(
+                    state, alg.client_axes(state), cshard, rshard)
+                batch = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(x, cshard),
+                    batch)
+                if schedule is not None:
+                    schedule = jax.tree.map(
+                        lambda x: jax.lax.with_sharding_constraint(
+                            x, cshard),
+                        schedule)
+            new_state, metrics = fn(state, batch, schedule)
+            if cshard is not None:
+                new_state = _constrain_marked(
+                    new_state, alg.client_axes(new_state), cshard, rshard)
+            return new_state, metrics
+
+    donate = alg.donate_state and jax.default_backend() != "cpu"
+    return jax.jit(wrapped, donate_argnums=(0,) if donate else ())
+
+
+def place_algorithm_state(alg: "Algorithm", state: PyTree, mesh) -> PyTree:
+    """device_put `state` onto `mesh` per the algorithm's `client_axes`
+    declaration: client leaves split over the client mesh axes, the rest
+    replicated on every device. No-op when mesh is None."""
+    if mesh is None:
+        return state
+    if alg.client_axes is None:
+        raise ValueError(
+            f"algorithm {alg.name!r} declares no client_axes; cannot place "
+            "its state on a mesh")
+    cshard = client_sharding(mesh)
+    rshard = replicated_sharding(mesh)
+    return jax.tree.map(
+        lambda x, m: jax.device_put(x, cshard if m else rshard),
+        state, alg.client_axes(state))
 
 
 def _alg_events(name: str, **fixed):
@@ -380,6 +512,8 @@ register_algorithm(Algorithm(
     steps_per_round=lambda hp: 1,
     serve_params=lambda state: state.params,
     uses_optimizer=True,
+    # towers AND the tower slices of the optimizer moments are per-client
+    client_axes=client_axes_by_keys("towers"),
     description="Non-federated multi-task split learning (paper Alg. 1): "
                 "private towers, shared server, implicit aggregation.",
 ))
@@ -430,6 +564,7 @@ register_algorithm(Algorithm(
     round_bytes=events_round_bytes(_splitfed_events),
     round_events=_splitfed_events,
     serve_params=_identity,  # state IS {"towers","server"}
+    client_axes=client_axes_by_keys("towers"),
     description="SplitFed [Thapa et al.]: split learning with fed-averaged "
                 "client parts every round.",
 ))
@@ -482,6 +617,8 @@ register_algorithm(Algorithm(
     eval_fn=federation.eval_fedavg,
     round_bytes=events_round_bytes(_fedavg_events),
     round_events=_fedavg_events,
+    # per-client full-model replicas: both halves carry the client axis
+    client_axes=client_axes_by_keys("towers", "servers"),
     description="FedAvg [McMahan et al.]: classic federation of the full "
                 "model; exhibits client drift under heterogeneity.",
 ))
@@ -536,6 +673,10 @@ register_algorithm(Algorithm(
     round_events=_fedem_events,
     state_to_tree=lambda state: {"components": state[0], "pi": state[1]},
     state_from_tree=lambda tree: (tree["components"], tree["pi"]),
+    # components are [K, ...] shared mixtures (replicated); only the
+    # responsibility matrix pi is [M, K] per-client
+    client_axes=lambda state: (jax.tree.map(lambda _: False, state[0]),
+                               jax.tree.map(lambda _: True, state[1])),
     description="FedEM [Marfoq et al. 2021]: mixture of K shared full models "
                 "with per-client responsibilities.",
 ))
@@ -568,6 +709,7 @@ register_algorithm(Algorithm(
     eval_fn=federation.eval_fedavg,
     round_bytes=events_round_bytes(_fedprox_events),
     round_events=_fedprox_events,
+    client_axes=client_axes_by_keys("towers", "servers"),
     description="FedProx [Li et al. 2020]: FedAvg whose local steps add "
                 "(mu/2)·||p - p_global||² drift damping (hp.prox_mu).",
 ))
@@ -628,6 +770,9 @@ register_algorithm(Algorithm(
     round_bytes=events_round_bytes(_parallelsfl_events),
     round_events=_parallelsfl_events,
     state_from_tree=_parallelsfl_from_tree,
+    # "servers" here is [C, ...] per-CLUSTER replicas (replicated over the
+    # mesh); only towers and the client->cluster map are per-client
+    client_axes=client_axes_by_keys("towers", "cidx"),
     description="ParallelSFL [Liao et al. 2024]: cluster-wise split "
                 "federation — towers fed-average within their cluster, "
                 "per-cluster server replicas merge each round "
@@ -674,6 +819,7 @@ register_algorithm(Algorithm(
     round_events=_smofi_events,
     serve_params=lambda state: {"towers": state["towers"],
                                 "server": state["server"]},
+    client_axes=client_axes_by_keys("towers"),
     description="SMoFi [Yang et al. 2025]: splitfed whose per-client server "
                 "replicas fuse their momentum buffers at every local step "
                 "(hp.momentum).",

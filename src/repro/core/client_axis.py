@@ -1,0 +1,184 @@
+"""The client axis as an execution resource: chunked scan-over-clients and
+mesh sharding, behind one seam.
+
+Every round builder maps per-client work over the leading client dimension
+(towers, per-client batches, schedule rows). Historically that map was a
+literal `jax.vmap`, which has two scale problems as M grows:
+
+  * compile time and peak memory grow with M — the whole [M, ...] block is
+    one fused program, so 4096 clients trace 4096-wide ops;
+  * a single device holds every client's intermediates at once.
+
+`client_map` is the drop-in replacement the round builders call instead
+(via `federation._vmap_with_smask` and the chunked loss path in
+`core/mtsl.py`). Its behavior is governed by the ambient `client_axis`
+context:
+
+  default (no context)    exactly `jax.vmap` — the traced program is
+                          bit-identical to the historical rounds (the
+                          seeded parity goldens pin this).
+  chunk=c                 the [M, ...] axis is reshaped to [M/c, c, ...]
+                          and scanned chunk-by-chunk (`lax.scan` over a
+                          vmap of width c — the Stacked/scan-over-layers
+                          idiom applied to clients). The compiled round
+                          body has shapes [c, ...] regardless of M, so
+                          trace+compile time stays flat as M grows and
+                          only one chunk's intermediates are live at a
+                          time.
+  sharding=NamedSharding  each chunk (or the whole axis, when chunk is
+                          None) carries a sharding constraint placing the
+                          client dimension on the mesh's client axes
+                          (("pod","data"), see utils/sharding.py) — under
+                          GSPMD jit the per-chunk block then runs
+                          data-parallel across devices and cross-client
+                          reductions (federation means, server gradients)
+                          lower to all-reduces.
+
+The context is set by `core.algorithms.shard_round_fn` for the duration of
+one round trace; nothing here touches global jax state.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, NamedTuple, Optional
+
+import jax
+
+PyTree = Any
+
+
+class ClientAxisCtx(NamedTuple):
+    """Ambient execution policy for the client axis (trace-time only)."""
+
+    chunk: Optional[int] = None  # scan block size; None = plain vmap
+    sharding: Optional[Any] = None  # NamedSharding for a [M, ...] leaf
+
+
+_DEFAULT = ClientAxisCtx()
+_STACK: list = [_DEFAULT]
+
+
+def current() -> ClientAxisCtx:
+    return _STACK[-1]
+
+
+def current_chunk() -> Optional[int]:
+    return _STACK[-1].chunk
+
+
+def current_sharding():
+    return _STACK[-1].sharding
+
+
+@contextmanager
+def client_axis(chunk: Optional[int] = None, sharding=None):
+    """Scope a client-axis execution policy over a round trace.
+
+    `chunk=None, sharding=None` is the identity — `client_map` stays a
+    plain `jax.vmap` and traces bit-identically to code that never heard
+    of this module."""
+    if chunk is not None and chunk < 1:
+        raise ValueError(f"client chunk must be >= 1, got {chunk}")
+    _STACK.append(ClientAxisCtx(chunk=chunk, sharding=sharding))
+    try:
+        yield _STACK[-1]
+    finally:
+        _STACK.pop()
+
+
+def _chunk_spec_sharding(sharding):
+    """The sharding for a [n_chunks, c, ...] reshaped leaf: the client mesh
+    axes move from dim 0 to dim 1 (the in-chunk client dim); the scan dim
+    is replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = sharding.spec
+    axes = spec[0] if len(spec) else None
+    return NamedSharding(sharding.mesh, P(None, axes))
+
+
+def constrain_clients(tree: PyTree, sharding=None) -> PyTree:
+    """`with_sharding_constraint` every leaf's LEADING axis onto the client
+    mesh axes (no-op when no sharding is ambient/passed). Scalar leaves are
+    left alone."""
+    sharding = current_sharding() if sharding is None else sharding
+    if sharding is None:
+        return tree
+    return jax.tree.map(
+        lambda x: x
+        if getattr(x, "ndim", 0) == 0
+        else jax.lax.with_sharding_constraint(x, sharding),
+        tree,
+    )
+
+
+def client_map(fn, *args, in_axes=0):
+    """Map `fn` over the leading client axis of `args`, honoring the
+    ambient `client_axis` context.
+
+    `in_axes` follows vmap's int-or-tuple convention restricted to entries
+    {0, None}: 0 = the arg carries a leading client axis (may be a pytree
+    of such arrays), None = broadcast to every client. With no ambient
+    chunk this IS `jax.vmap(fn, in_axes=in_axes)(*args)` — same trace, same
+    bits. With chunk=c (and M > c), mapped args are reshaped to
+    [M/c, c, ...] and fn is vmapped per chunk under a `lax.scan`; outputs
+    (which must all carry the mapped axis) are reshaped back to [M, ...].
+    M must be divisible by c.
+    """
+    ctx = current()
+    axes = (in_axes,) * len(args) if isinstance(in_axes, int) else tuple(in_axes)
+    if len(axes) != len(args):
+        raise ValueError(f"in_axes has {len(axes)} entries for {len(args)} args")
+    if any(a not in (0, None) for a in axes):
+        raise ValueError(f"client_map supports in_axes entries 0/None, got {axes}")
+
+    mapped_leaves = [
+        leaf
+        for a, ax in zip(args, axes)
+        if ax == 0
+        for leaf in jax.tree.leaves(a)
+    ]
+    if not mapped_leaves:
+        raise ValueError("client_map needs at least one mapped (in_axes=0) arg")
+    M = mapped_leaves[0].shape[0]
+
+    chunk = ctx.chunk
+    if chunk is None or chunk >= M:
+        out = jax.vmap(fn, in_axes=axes)(*args)
+        return constrain_clients(out) if chunk is not None else out
+    if M % chunk:
+        raise ValueError(
+            f"client axis of size {M} is not divisible by client chunk "
+            f"{chunk}; pick a chunk dividing M (and the mesh client extent)"
+        )
+    n = M // chunk
+
+    chunk_sharding = (
+        _chunk_spec_sharding(ctx.sharding) if ctx.sharding is not None else None
+    )
+
+    def to_chunks(tree):
+        out = jax.tree.map(
+            lambda x: x.reshape((n, chunk) + x.shape[1:]), tree
+        )
+        if chunk_sharding is not None:
+            out = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(x, chunk_sharding),
+                out,
+            )
+        return out
+
+    xs = tuple(to_chunks(a) for a, ax in zip(args, axes) if ax == 0)
+
+    def body(carry, xs_chunk):
+        it = iter(xs_chunk)
+        call_args = tuple(
+            next(it) if ax == 0 else a for a, ax in zip(args, axes)
+        )
+        out = jax.vmap(fn, in_axes=axes)(*call_args)
+        out = constrain_clients(out, chunk_sharding)
+        return carry, out
+
+    _, ys = jax.lax.scan(body, None, xs)
+    ys = jax.tree.map(lambda y: y.reshape((M,) + y.shape[2:]), ys)
+    return constrain_clients(ys)

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.client_axis import client_map
 from repro.core.schedule import (
     ClientSchedule,
     broadcast_weights,
@@ -59,14 +60,19 @@ ALGORITHMS = ("mtsl", "splitfed", "fedavg")
 
 
 def _vmap_with_smask(fn, *args, in_axes=0):
-    """vmap `fn(*args, smask_row)` over clients; the last arg is the
-    optional [M, b] sample mask. When it is None, fn is vmapped WITHOUT the
+    """Map `fn(*args, smask_row)` over clients; the last arg is the
+    optional [M, b] sample mask. When it is None, fn is mapped WITHOUT the
     mask argument so the trace stays bit-identical to the pre-sizing round
-    builders (the parity goldens pin this)."""
+    builders (the parity goldens pin this).
+
+    The map itself is `core.client_axis.client_map`: a plain `jax.vmap`
+    by default, a chunked scan-over-clients (optionally mesh-sharded) when
+    a `client_axis` context is ambient — every round builder in this
+    module inherits massive-M support through this one seam."""
     if args[-1] is None:
         axes = in_axes if isinstance(in_axes, int) else tuple(in_axes[:-1])
-        return jax.vmap(lambda *a: fn(*a, None), in_axes=axes)(*args[:-1])
-    return jax.vmap(fn, in_axes=in_axes)(*args)
+        return client_map(lambda *a: fn(*a, None), *args[:-1], in_axes=axes)
+    return client_map(fn, *args, in_axes=in_axes)
 
 
 def sync_transform(algorithm: str, num_clients: int) -> Callable[[PyTree], PyTree]:

@@ -22,6 +22,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import client_axis
 from repro.core import federation
 from repro.core import schedule as schedule_mod
 from repro.core.split import is_client_path, stack_towers, replicate_tower
@@ -88,6 +89,17 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
     for classifier families (aux = 0, the paper's experiments). All-ones
     is bit-identical to no mask.
 
+    Under an ambient `core.client_axis` context with chunk=c < M the whole
+    per-client block (tower vmap + smashed fold + server forward + per-task
+    reduction) runs as a `lax.scan` over M/c client chunks instead of one
+    M-wide trace: compiled shapes are [c, ...] regardless of M, so compile
+    time and live memory stay flat as M grows. Per-task losses, accuracy
+    numerators, and gradients are accumulated across chunks, matching the
+    dense trace up to floating-point reduction order (exactly, for
+    classifier families where aux = 0; an MoE batch-level aux becomes a
+    sum of per-chunk aux terms). The default (no context) path below is
+    textually the historical dense trace — bit-identical.
+
     `sample_mask` (optional [M, b] {0,1}) is capability-aware batch sizing
     (core/schedule.py): client m's per-task loss becomes the mean over its
     first sizes[m] samples of a padded batch row — pad samples contribute
@@ -103,8 +115,103 @@ def make_loss_fn(model: Model, num_clients: int) -> Callable:
     M = num_clients
     is_classifier = cfg.family in ("mlp", "resnet")
 
+    def _chunk_terms(towers_c, server, batch_c, part_c, sm_c, sd_c, c):
+        """One client chunk's forward: per-task losses [c], the chunk's
+        accuracy-numerator contribution, and its aux term. Mirrors the
+        dense body below with M -> c."""
+        inputs = {k: v for k, v in batch_c.items() if k != "label"}
+        smashed = jax.vmap(model.tower_forward)(towers_c, inputs)
+        if part_c is not None:
+            smashed = jax.tree.map(
+                lambda s: jnp.where(
+                    (part_c > 0).reshape((c,) + (1,) * (s.ndim - 1)),
+                    s, jax.lax.stop_gradient(s)),
+                smashed)
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), smashed)
+        logits, aux = model.server_forward(server, flat)
+        if is_classifier:
+            labels = batch_c["label"].reshape(-1)
+            logits32 = logits.astype(jnp.float32)
+            per_logits = logits32.reshape(c, -1, logits.shape[-1])
+            if sm_c is None:
+                per = jax.vmap(_ce_logits)(per_logits, batch_c["label"])
+            elif sd_c is None:
+                per = jax.vmap(_ce_logits)(per_logits, batch_c["label"], sm_c)
+            else:
+                per = jax.vmap(_ce_logits)(
+                    per_logits, batch_c["label"], sm_c,
+                    jnp.maximum(sd_c, 1e-9))
+            correct = (jnp.argmax(logits32, -1) == labels).astype(jnp.float32)
+            w = jnp.ones_like(correct) if sm_c is None else sm_c.reshape(-1)
+            return per, jnp.sum(correct * w), aux
+        per_logits = logits.astype(jnp.float32).reshape(
+            (c, -1) + logits.shape[1:])
+        if sm_c is None:
+            per = jax.vmap(_lm_loss)(per_logits, batch_c["tokens"])
+        elif sd_c is None:
+            per = jax.vmap(_lm_loss)(per_logits, batch_c["tokens"], sm_c)
+        else:
+            seq_tokens = batch_c["tokens"].shape[-1] - 1
+            per = jax.vmap(_lm_loss)(
+                per_logits, batch_c["tokens"], sm_c,
+                jnp.maximum(sd_c * seq_tokens, 1e-9))
+        return per, jnp.zeros((), jnp.float32), aux
+
+    def _chunked_loss(params, batch, participation, sample_mask,
+                      sample_denom, c):
+        if M % c:
+            raise ValueError(
+                f"num_clients {M} not divisible by client chunk {c}")
+        n = M // c
+        shard = client_axis.current_sharding()
+        chunk_shard = (None if shard is None
+                       else client_axis._chunk_spec_sharding(shard))
+
+        def blk(tree):
+            out = jax.tree.map(
+                lambda x: x.reshape((n, c) + x.shape[1:]), tree)
+            return client_axis.constrain_clients(out, chunk_shard)
+
+        xs = {"towers": blk(params["towers"]), "batch": blk(batch)}
+        if participation is not None:
+            xs["part"] = participation.reshape(n, c)
+        if sample_mask is not None:
+            xs["sm"] = blk(sample_mask)
+        if sample_denom is not None:
+            xs["sd"] = sample_denom.reshape(n, c)
+        server = params["server"]
+
+        def body(carry, x):
+            num, aux_acc = carry
+            per_c, num_c, aux_c = _chunk_terms(
+                x["towers"], server, x["batch"], x.get("part"),
+                x.get("sm"), x.get("sd"), c)
+            return (num + num_c, aux_acc + aux_c), per_c
+
+        zero = jnp.zeros((), jnp.float32)
+        (acc_num, aux), per_chunks = jax.lax.scan(body, (zero, zero), xs)
+        per = per_chunks.reshape(M)
+        per = client_axis.constrain_clients(per, shard)
+        wper = per if participation is None else per * participation
+        loss = jnp.sum(wper) + aux
+        if not is_classifier:
+            return loss, {"loss": loss, "per_task": per, "aux": aux}
+        width = jax.tree.leaves(batch)[0].shape[1]
+        if sample_mask is None:
+            acc_den = jnp.asarray(M * width, jnp.float32)
+        elif sample_denom is None:
+            acc_den = jnp.maximum(jnp.sum(sample_mask), 1.0)
+        else:
+            acc_den = jnp.maximum(jnp.sum(sample_denom), 1e-9)
+        acc = acc_num / acc_den
+        return loss, {"loss": loss, "per_task": per, "acc": acc, "aux": aux}
+
     def loss_fn(params, batch, participation=None, sample_mask=None,
                 sample_denom=None):
+        chunk = client_axis.current_chunk()
+        if chunk is not None and chunk < M:
+            return _chunked_loss(params, batch, participation, sample_mask,
+                                 sample_denom, chunk)
         inputs = {k: v for k, v in batch.items() if k != "label"}
         smashed = jax.vmap(model.tower_forward)(params["towers"], inputs)
         if participation is not None:
@@ -293,7 +400,41 @@ def build_eval_step(model: Model, num_clients: int) -> Callable:
     M = num_clients
     is_classifier = cfg.family in ("mlp", "resnet")
 
+    def _chunk_eval(params, batch, c):
+        n = M // c
+
+        def blk(tree):
+            return jax.tree.map(
+                lambda x: x.reshape((n, c) + x.shape[1:]), tree)
+
+        xs = {"towers": blk(params["towers"]), "batch": blk(batch)}
+        server = params["server"]
+
+        def body(carry, x):
+            inputs = {k: v for k, v in x["batch"].items() if k != "label"}
+            smashed = jax.vmap(model.tower_forward)(x["towers"], inputs)
+            flat = jax.tree.map(
+                lambda t: t.reshape((-1,) + t.shape[2:]), smashed)
+            logits, _ = model.server_forward(server, flat)
+            logits = logits.astype(jnp.float32)
+            if is_classifier:
+                preds = jnp.argmax(logits, -1).reshape(c, -1)
+                correct = (preds == x["batch"]["label"]).astype(jnp.float32)
+                return carry, jnp.mean(correct, axis=1)
+            return carry, jax.vmap(_lm_loss)(
+                logits.reshape((c, -1) + logits.shape[1:]),
+                x["batch"]["tokens"])
+
+        _, per = jax.lax.scan(body, None, xs)
+        per = per.reshape(M)
+        if is_classifier:
+            return {"per_task_acc": per, "acc_mtl": jnp.mean(per)}
+        return {"per_task_loss": per, "loss": jnp.sum(per)}
+
     def eval_step(params, batch):
+        chunk = client_axis.current_chunk()
+        if chunk is not None and chunk < M and M % chunk == 0:
+            return _chunk_eval(params, batch, chunk)
         inputs = {k: v for k, v in batch.items() if k != "label"}
         smashed = jax.vmap(model.tower_forward)(params["towers"], inputs)
         flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), smashed)

@@ -1,0 +1,215 @@
+"""Host-driven chunked MTSL round: ONE compiled program for every M.
+
+The in-jit chunked path (core/client_axis.py) makes the compiled round
+body [chunk, ...]-shaped, but the jitted round is still keyed by the full
+[M, ...] input shapes — sweeping M recompiles (cheaply) per M. This module
+removes even that: the round becomes a small HOST loop over M/chunk client
+blocks calling three jitted kernels whose shapes depend only on
+(chunk, batch width, model, optimizer) — so two runs at DIFFERENT M with
+the same chunk reuse literally the same executables (the compile-count
+assertion in tests/test_client_axis.py pins this, and
+benchmarks/scaling.py's flat-compile-vs-M claim rests on it).
+
+The decomposition is exact for the MTSL round because the round is
+additive over clients given the shared server:
+
+  grads    one chunk's tower grads are self-contained; the server grad is
+           the SUM of per-chunk server grads (the implicit aggregation);
+  towers   sgd/momentum/adamw updates are element-wise per leaf, so a
+           chunk's tower params + optimizer moments update from that
+           chunk's grads alone (per-component client LRs and the
+           participation freeze are per-client multiplies, sliced along);
+  server   one update from the summed server grad, scaled by the server
+           component LR — identical to the dense round's server step.
+
+Matches `core.algorithms.jit_round_fn(mtsl)` up to float reduction order
+(per-task metrics exactly; `acc` as the mean of equal-width chunk means).
+
+Restrictions (ValueError): hp.microbatches must be 1 and the schedule must
+not carry capability batch sizes (`schedule.sizes`) — both interleave
+cross-client reductions into the per-step loss in ways this host split
+does not reproduce. Participation masks and straggler budgets are fine
+(mtsl rounds are single-step, so the budget is moot, exactly as in
+core/algorithms._mtsl_round).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lr_policy
+from repro.core.mtsl import TrainState, make_loss_fn
+from repro.optim.optimizers import Optimizer, apply_updates, sgd
+
+
+@functools.lru_cache(maxsize=None)
+def _default_sgd(lr: float) -> Optimizer:
+    """One Optimizer instance per lr so the kernel cache below keys stably
+    (a fresh sgd(lr) closure per call would defeat the lru_cache)."""
+    return sgd(lr)
+
+
+def _is_ps(x) -> bool:
+    """A params-shaped dict inside an optimizer state (moments mirror the
+    {"towers","server"} params layout)."""
+    return isinstance(x, dict) and set(x.keys()) == {"towers", "server"}
+
+
+def _opt_part(opt_state, key: str):
+    """Project an optimizer state onto one params component ("towers" or
+    "server"): every params-shaped moment dict collapses to its `key`
+    subtree; stateless optimizers (sgd's ()) pass through unchanged."""
+    return jax.tree.map(
+        lambda d: d[key] if _is_ps(d) else d, opt_state, is_leaf=_is_ps)
+
+
+def _opt_join(template, towers_state, server_state):
+    """Inverse of `_opt_part`: rebuild a full optimizer state from updated
+    towers/server component states, using `template` for the outer
+    structure."""
+    outer = jax.tree.structure(template, is_leaf=_is_ps)
+    leaves = jax.tree.leaves(template, is_leaf=_is_ps)
+    tow = outer.flatten_up_to(towers_state)
+    srv = outer.flatten_up_to(server_state)
+    out = [
+        {"towers": t, "server": s} if _is_ps(d) else s
+        for d, t, s in zip(leaves, tow, srv)
+    ]
+    return jax.tree.unflatten(outer, out)
+
+
+class ScanKernels(NamedTuple):
+    grads: callable  # (towers_c, server, batch_c, mask_c) -> (tg, sg, metrics)
+    tower_update: callable  # (towers_c, opt_c, tg, lr_c, mask_c, step)
+    server_update: callable  # (server, opt_s, sg, lr_s, step)
+
+
+@functools.lru_cache(maxsize=None)
+def mtsl_scan_kernels(model, chunk: int, opt: Optimizer) -> ScanKernels:
+    """The three jitted per-chunk kernels, cached on (model, chunk, opt) —
+    every M sharing these parameters shares the executables. Each kernel's
+    jit cache is additionally keyed by jax on the batch width, so a fixed
+    (model, chunk, b, opt) compiles each kernel exactly once
+    (`kernels.grads._cache_size() == 1` across an M sweep)."""
+    loss_fn = make_loss_fn(model, chunk)
+
+    @jax.jit
+    def grads(towers_c, server, batch_c, mask_c):
+        params = {"towers": towers_c, "server": server}
+        (_, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch_c, mask_c)
+        return g["towers"], g["server"], metrics
+
+    @jax.jit
+    def tower_update(towers_c, opt_c, tg, lr_c, mask_c, step):
+        upd, new_opt = opt.update(tg, opt_c, towers_c, step)
+        # per-component client LRs + participation freeze: both are
+        # per-client multiplies along the leading axis (per_component_lr's
+        # _scale and build_train_step's zeroing, fused)
+        scale = lr_c * mask_c
+        upd = jax.tree.map(
+            lambda u: u * scale.reshape(
+                (-1,) + (1,) * (u.ndim - 1)).astype(u.dtype),
+            upd)
+        return apply_updates(towers_c, upd), new_opt
+
+    @jax.jit
+    def server_update(server, opt_s, sg, lr_s, step):
+        upd, new_opt = opt.update(sg, opt_s, server, step)
+        upd = jax.tree.map(lambda u: u * lr_s.astype(u.dtype), upd)
+        return apply_updates(server, upd), new_opt
+
+    return ScanKernels(grads, tower_update, server_update)
+
+
+def build_mtsl_scan_round(model, num_clients: int, hp, chunk: int):
+    """round_fn(state: TrainState, batch, schedule=None) -> (state, metrics)
+    — the mtsl round as a host loop over `num_clients/chunk` client blocks
+    (see module docstring for semantics and restrictions)."""
+    if num_clients % chunk:
+        raise ValueError(
+            f"num_clients {num_clients} not divisible by chunk {chunk}")
+    if hp.microbatches != 1:
+        raise ValueError(
+            "build_mtsl_scan_round does not support gradient accumulation "
+            f"(hp.microbatches={hp.microbatches}); use the in-jit chunked "
+            "path (shard_round_fn) instead")
+    opt = hp.optimizer if hp.optimizer is not None else _default_sgd(hp.lr)
+    clr = hp.component_lr
+    if clr is None:  # paper's Eq. 9 policy, as in algorithms._mtsl_round
+        clr = lr_policy.server_scaled(
+            num_clients, server_scale=2.0 / num_clients)
+    clients_lr = jnp.asarray(clr.clients, jnp.float32)  # [M]
+    server_lr = jnp.asarray(clr.server, jnp.float32)
+    kernels = mtsl_scan_kernels(model, chunk, opt)
+    n = num_clients // chunk
+    is_classifier = model.cfg.family in ("mlp", "resnet")
+
+    def round_fn(state: TrainState, batch, schedule=None):
+        if schedule is not None and schedule.sizes is not None:
+            raise ValueError(
+                "build_mtsl_scan_round does not support capability batch "
+                "sizes (schedule.sizes); use shard_round_fn instead")
+        mask = (jnp.ones((num_clients,), jnp.float32) if schedule is None
+                else schedule.mask)
+        towers = state.params["towers"]
+        opt_t = _opt_part(state.opt_state, "towers")
+        opt_s = _opt_part(state.opt_state, "server")
+
+        sg_sum = None
+        new_towers, new_opt_t, pers, accs = [], [], [], []
+        loss = aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            sl = slice(i * chunk, (i + 1) * chunk)
+            towers_c = jax.tree.map(lambda t: t[sl], towers)
+            batch_c = jax.tree.map(lambda x: x[sl], batch)
+            tg, sg, metrics = kernels.grads(
+                towers_c, state.params["server"], batch_c, mask[sl])
+            sg_sum = (sg if sg_sum is None
+                      else jax.tree.map(jnp.add, sg_sum, sg))
+            t_new, o_new = kernels.tower_update(
+                towers_c, jax.tree.map(lambda t: t[sl], opt_t), tg,
+                clients_lr[sl], mask[sl], state.step)
+            new_towers.append(t_new)
+            new_opt_t.append(o_new)
+            pers.append(metrics["per_task"])
+            loss = loss + metrics["loss"]
+            aux = aux + metrics["aux"]
+            if is_classifier:
+                accs.append(metrics["acc"])
+
+        server, opt_s = kernels.server_update(
+            state.params["server"], opt_s, sg_sum, server_lr, state.step)
+        towers = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_towers)
+        opt_t = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_opt_t)
+        params = {"towers": towers, "server": server}
+        opt_state = _opt_join(state.opt_state, opt_t, opt_s)
+        metrics = {"loss": loss,
+                   "per_task": jnp.concatenate(pers, axis=0),
+                   "aux": aux}
+        if is_classifier:
+            # equal-width chunks: the mean of chunk means IS the global mean
+            metrics["acc"] = jnp.mean(jnp.stack(accs))
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return round_fn
+
+
+def scan_round_compile_counts(model, chunk: int,
+                              opt: Optional[Optimizer] = None,
+                              lr: float = 0.1) -> dict:
+    """Compiled-shape counts of the cached kernels for (model, chunk, opt)
+    — the observable behind the "one compile per (chunk, model) shape"
+    scaling claim. Returns zeros if the kernels were never built."""
+    opt = opt if opt is not None else _default_sgd(lr)
+    k = mtsl_scan_kernels(model, chunk, opt)
+    return {
+        "grads": k.grads._cache_size(),
+        "tower_update": k.tower_update._cache_size(),
+        "server_update": k.server_update._cache_size(),
+    }

@@ -53,14 +53,34 @@ class MultiTaskLMSource:
             out[:, t] = state
         return out
 
-    def all_clients_batch(self, rng: np.random.Generator, batch_per_client: int, seq: int):
-        """[M, b, S] token batch."""
-        return np.stack(
-            [
-                self.client_tokens(rng, m, batch_per_client, seq)
-                for m in range(self.num_clients)
-            ]
-        )
+    def all_clients_batch(self, rng: np.random.Generator, batch_per_client: int,
+                          seq: int, vectorized: bool = False):
+        """[M, b, S] token batch.
+
+        vectorized=False is the historical per-client loop (byte-identical
+        seeded stream). vectorized=True advances ALL clients' chains with
+        one batched inverse-CDF draw per position — host cost per client
+        stays flat as M grows (only the inherently sequential loop over the
+        sequence remains). Same distribution, different (seeded) stream.
+        """
+        if not vectorized:
+            return np.stack(
+                [
+                    self.client_tokens(rng, m, batch_per_client, seq)
+                    for m in range(self.num_clients)
+                ]
+            )
+        M, V, b = self.num_clients, self.vocab_size, batch_per_client
+        cums = np.cumsum(np.stack(self.chains), axis=2)  # [M, V, V]
+        out = np.empty((M, b, seq), np.int64)
+        state = rng.integers(0, V, size=(M, b))
+        out[..., 0] = state
+        midx = np.arange(M)[:, None]
+        for t in range(1, seq):
+            u = rng.random((M, b))
+            state = (cums[midx, state] < u[..., None]).sum(axis=-1)
+            out[..., t] = state
+        return out
 
     def entropy_floor(self, client: int) -> float:
         """Stationary conditional entropy of client's chain (nats/token)."""

@@ -28,17 +28,25 @@ def client_batches(
     seed: int = 0,
     sharding=None,
     as_numpy: bool = False,
+    vectorized: bool = False,
 ) -> Iterator[dict]:
-    """Yield batches from a MultiTaskImageSource or MultiTaskLMSource."""
+    """Yield batches from a MultiTaskImageSource or MultiTaskLMSource.
+
+    `vectorized=True` draws each round's batch with the sources' batched
+    across-clients RNG paths — same distribution from a different seeded
+    stream, host cost per client flat in M (massive-M runs; the default
+    per-client loop's draw order is pinned by the parity goldens)."""
     rng = np.random.default_rng(seed)
     i = 0
     is_lm = hasattr(source, "chains")
     while steps is None or i < steps:
         if is_lm:
-            toks = source.all_clients_batch(rng, batch_per_client, seq_len)
+            toks = source.all_clients_batch(rng, batch_per_client, seq_len,
+                                            vectorized=vectorized)
             batch = {"tokens": np.asarray(toks, np.int32)}
         else:
-            x, y = source.all_tasks_batch(rng, batch_per_client)
+            x, y = source.all_tasks_batch(rng, batch_per_client,
+                                          vectorized=vectorized)
             batch = {"image": np.asarray(x), "label": np.asarray(y, np.int32)}
         if not as_numpy:
             batch = {k: jnp.asarray(v) for k, v in batch.items()}

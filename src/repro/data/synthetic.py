@@ -46,7 +46,17 @@ def _smooth_field(rng: np.random.Generator, size: int, channels: int, octaves=3)
 
 @dataclass
 class MultiTaskImageSource:
-    """num_tasks tasks over num_classes classes (paper: one class per task)."""
+    """num_tasks tasks over num_classes classes (paper: one class per task).
+
+    `num_tasks=None` (default) keeps the paper's one-task-per-class setup
+    (M == C). Setting it decouples the client count from the class count —
+    task m's main class is `m % num_classes` — so massive-M scaling sweeps
+    (benchmarks/scaling.py) can grow the client axis against a fixed model
+    head. The default draw order is byte-identical to the historical
+    source; `all_tasks_batch(..., vectorized=True)` switches to a batched
+    across-clients RNG draw (different, still seeded, stream) whose host
+    cost stays flat per client as M grows.
+    """
 
     num_classes: int = 10
     image_size: int = 28
@@ -56,6 +66,7 @@ class MultiTaskImageSource:
     jitter: float = 1.5  # within-class variability
     class_sep: float = 0.3  # class-delta scale vs the shared base pattern
     seed: int = 0
+    num_tasks: int | None = None  # clients; None -> num_classes (paper)
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -77,16 +88,33 @@ class MultiTaskImageSource:
             x = x + self.noise_sigma * rng.normal(size=x.shape).astype(np.float32)
         return x.astype(np.float32)
 
+    @property
+    def tasks(self) -> int:
+        return self.num_tasks if self.num_tasks is not None else self.num_classes
+
     def task_batch(self, rng: np.random.Generator, task: int, batch: int):
         """One task's batch: labels ~ Eq. 13, images class-conditional."""
-        p = heterogeneous_label_dist(self.num_classes, task, self.alpha)
+        p = heterogeneous_label_dist(
+            self.num_classes, task % self.num_classes, self.alpha)
         labels = rng.choice(self.num_classes, size=batch, p=p)
         return self.sample_class(rng, labels), labels
 
-    def all_tasks_batch(self, rng: np.random.Generator, batch_per_task: int):
-        """[M, b, H, W(, ch)] images + [M, b] labels (training batch)."""
+    def all_tasks_batch(self, rng: np.random.Generator, batch_per_task: int,
+                        vectorized: bool = False):
+        """[M, b, H, W(, ch)] images + [M, b] labels (training batch).
+
+        vectorized=False is the historical per-task loop (byte-identical
+        seeded stream — the parity goldens depend on its draw order).
+        vectorized=True draws every task's labels with one inverse-CDF pass
+        and every image with one batched normal draw: the host cost per
+        client stays flat as M grows, keeping the async pipeline's
+        background thread off the critical path at massive M. The two modes
+        sample the same distribution from different (seeded) streams.
+        """
+        if vectorized:
+            return self._all_tasks_batch_vectorized(rng, batch_per_task)
         imgs, labs = [], []
-        for m in range(self.num_classes):
+        for m in range(self.tasks):
             x, y = self.task_batch(rng, m, batch_per_task)
             imgs.append(x)
             labs.append(y)
@@ -95,9 +123,30 @@ class MultiTaskImageSource:
             x = x[..., 0]
         return x, np.stack(labs)
 
+    def _all_tasks_batch_vectorized(self, rng: np.random.Generator,
+                                    batch_per_task: int):
+        T, C = self.tasks, self.num_classes
+        # [T, C] per-task label distributions (Eq. 13), one inverse-CDF draw
+        P = np.stack([
+            heterogeneous_label_dist(C, m % C, self.alpha) for m in range(T)
+        ])
+        cum = np.cumsum(P, axis=1)  # [T, C], last column == 1
+        u = rng.random((T, batch_per_task))
+        labels = np.minimum(
+            (cum[:, None, :] < u[:, :, None]).sum(axis=-1), C - 1)
+        base = self.prototypes[labels]  # [T, b, H, W, ch]
+        x = base + self.jitter * rng.normal(size=base.shape).astype(np.float32)
+        if self.noise_sigma > 0:
+            x = x + self.noise_sigma * rng.normal(
+                size=x.shape).astype(np.float32)
+        x = x.astype(np.float32)
+        if self.channels == 1:
+            x = x[..., 0]
+        return x, labels
+
     def test_batch(self, rng: np.random.Generator, task: int, batch: int):
         """Paper §4.1: each task is *tested on its main label only*."""
-        labels = np.full(batch, task)
+        labels = np.full(batch, task % self.num_classes)
         x = self.sample_class(rng, labels)
         if self.channels == 1:
             x = x[..., 0]

@@ -1,11 +1,20 @@
 """Training launcher.
 
-Two modes:
-  * CPU-runnable end-to-end training (default): picks the smoke/paper-scale
-    variant of --arch and actually trains on synthetic heterogeneous data
-    (this is what examples/train_lm.py drives).
-  * --mesh: run the same program pjit-sharded on the available devices
-    (use XLA_FLAGS=--xla_force_host_platform_device_count=N to emulate).
+CPU-runnable end-to-end training: picks the smoke/paper-scale variant of
+--arch and actually trains on synthetic heterogeneous data (this is what
+examples/train_lm.py drives).
+
+Massive-M scale-out (core/client_axis.py, README "Scaling"):
+  * `--mesh data=N[,model=K[,pod=P]]` shards the client axis of every
+    round over the device mesh (client leaves over ("pod","data"), the
+    rest replicated; federation means become all-reduces). Use
+    XLA_FLAGS=--xla_force_host_platform_device_count=N to emulate devices
+    on CPU; num-clients must divide by the client-shard count.
+  * `--client-chunk C` runs each round's per-client block as a scan over
+    chunks of C clients — compile time and peak memory stay flat as the
+    client count grows. Composes with --mesh (C must be a multiple of the
+    client-shard count). Defaults preserve the single-device trajectory
+    bit for bit.
 
 `--algorithm` accepts anything in the Algorithm registry
 (core/algorithms.py): mtsl, splitfed, fedavg, fedprox, fedem, smofi,
@@ -47,6 +56,7 @@ from repro.core.topology import TOPOLOGIES, build_topology, mbps
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
+from repro.launch.mesh import make_mesh_from_spec
 from repro.models.registry import build_model
 from repro.optim import adamw, sgd
 from repro.train.loop import TrainConfig, train
@@ -156,6 +166,11 @@ def main(argv=None):
                     help="padded-row headroom for capability batching: fast "
                          "clients may receive up to boost x "
                          "--batch-per-client samples per step")
+    ap.add_argument("--num-clients", type=int, default=None,
+                    help="override the arch config's M (client scale-out "
+                         "sweeps; with a classifier arch the task count "
+                         "then decouples from the class count — task m's "
+                         "main class is m %% num_classes)")
     ap.add_argument("--batch-per-client", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--alpha", type=float, default=0.0, help="heterogeneity")
@@ -163,6 +178,23 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--server-lr-scale", type=float, default=None)
     ap.add_argument("--optimizer", default=None, choices=[None, "sgd", "adamw"])
+    ap.add_argument("--mesh", default=None, metavar="data=N[,model=K[,pod=P]]",
+                    help="shard the client axis over a device mesh "
+                         "(launch/mesh.py); client leaves split over the "
+                         "('pod','data') axes, everything else replicates. "
+                         "Emulate devices on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--client-chunk", type=int, default=None,
+                    help="scan-over-clients block size: rounds process the "
+                         "client axis in chunks of this many clients, so "
+                         "compile time/memory stay flat as --arch's client "
+                         "count grows; must divide num-clients (and be a "
+                         "multiple of the mesh's client-shard count)")
+    ap.add_argument("--vectorized-data", action="store_true",
+                    help="draw each round's synthetic batch with ONE batched "
+                         "numpy RNG pass across all clients (host cost per "
+                         "client flat in M) instead of the per-client loop; "
+                         "same distribution, different seeded stream")
     ap.add_argument("--smoke", action="store_true", help="use reduced config")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -171,6 +203,8 @@ def main(argv=None):
     # full paper-scale configs run on CPU; assigned archs use smoke variants
     cfg = get_config(args.arch,
                      smoke=args.smoke or not args.arch.startswith("paper-"))
+    if args.num_clients is not None:
+        cfg = cfg.with_updates(num_clients=args.num_clients)
     model = build_model(cfg)
     M = cfg.num_clients
     is_classifier = cfg.family in ("mlp", "resnet")
@@ -220,21 +254,30 @@ def main(argv=None):
     # as_numpy: batch synthesis stays host-side so the async pipeline's
     # background thread owns it; the pipeline stages arrays on device
     if is_classifier:
+        # the paper ties one task to one class (num_classes == M); an
+        # explicit --num-clients decouples them via num_tasks so M can
+        # scale past the model's head width
         src = MultiTaskImageSource(
-            num_classes=M, image_size=cfg.image_size,
+            num_classes=M if args.num_clients is None else cfg.num_classes,
+            num_tasks=None if args.num_clients is None else M,
+            image_size=cfg.image_size,
             channels=cfg.image_channels, alpha=args.alpha,
             noise_sigma=args.noise_sigma, seed=args.seed,
         )
         batches = client_batches(src, per_round_batch,
                                  steps=rounds, seed=args.seed,
-                                 as_numpy=args.prefetch > 0)
+                                 as_numpy=args.prefetch > 0,
+                                 vectorized=args.vectorized_data)
     else:
         src = MultiTaskLMSource(vocab_size=cfg.vocab_size, num_clients=M,
                                 beta=1.0 - args.alpha, seed=args.seed)
         batches = client_batches(src, per_round_batch,
                                  seq_len=args.seq_len, steps=rounds,
                                  seed=args.seed,
-                                 as_numpy=args.prefetch > 0)
+                                 as_numpy=args.prefetch > 0,
+                                 vectorized=args.vectorized_data)
+
+    mesh = make_mesh_from_spec(args.mesh)
 
     # round-based algorithms ignore component_lr; mtsl applies it (Eq. 9)
     clr = lr_policy.server_scaled(M, args.server_lr_scale)
@@ -248,7 +291,9 @@ def main(argv=None):
                        prefetch=args.prefetch,
                        batch_per_client=args.batch_per_client,
                        topology=topo,
-                       time_per_sample_s=args.sim_ms_per_sample * 1e-3)
+                       time_per_sample_s=args.sim_ms_per_sample * 1e-3,
+                       mesh=mesh,
+                       client_chunk=args.client_chunk)
     state, history = train(model, opt, batches, tcfg, M, component_lr=clr)
     print(f"final loss: {history[-1]['loss']:.4f}")
     if topo is not None and history:

@@ -79,10 +79,13 @@ from repro.core import comm_cost
 from repro.core.algorithms import (
     HParams,
     get_algorithm,
-    jit_round_fn,
     num_rounds,
+    place_algorithm_state,
+    shard_round_fn,
     simulate_round_walltime,
 )
+from repro.core.client_axis import client_axis
+from repro.utils.sharding import client_sharding
 from repro.core.schedule import (
     ScheduleConfig,
     capability_profile,
@@ -138,6 +141,17 @@ class TrainConfig:
     # registry-driven HParams overrides (the launcher's --hp key=value
     # group); applied over the HParams assembled from the fields above
     hp_overrides: dict = field(default_factory=dict)
+    # massive-M client scale-out (core/client_axis.py, shard_round_fn).
+    # mesh: a jax Mesh whose client axes (("pod","data")) shard every
+    # leading-client-axis leaf — state (per alg.client_axes), the staged
+    # round batches, and the schedule rows; cross-client reductions lower
+    # to all-reduces. None = single-device (bit-identical to the goldens).
+    mesh: Optional[object] = None
+    # client_chunk: run each round's per-client block as a lax.scan over
+    # chunks of this many clients — flat compile time/memory as M grows.
+    # Must divide num_clients (and be a multiple of the mesh's client-shard
+    # count when both are set). None = plain vmap.
+    client_chunk: Optional[int] = None
 
 
 def train(
@@ -185,8 +199,25 @@ def train(
     rng = jax.random.PRNGKey(tcfg.seed)
     state = (alg.init_state(model, rng, num_clients, hp)
              if init_state is None else init_state)
-    round_fn = jit_round_fn(alg, model, num_clients, hp)
-    eval_fn = jax.jit(alg.eval_fn(model, num_clients)) if eval_batches else None
+    if tcfg.mesh is not None:
+        # split the client axis of the state over the mesh up front so the
+        # first round starts from device-resident shards
+        state = place_algorithm_state(alg, state, tcfg.mesh)
+    round_fn = shard_round_fn(alg, model, num_clients, hp,
+                              mesh=tcfg.mesh, client_chunk=tcfg.client_chunk)
+
+    def _jit_eval():
+        ev = alg.eval_fn(model, num_clients)
+        if tcfg.mesh is None and tcfg.client_chunk is None:
+            return jax.jit(ev)
+
+        def ev_ctx(state, batch):
+            with client_axis(chunk=tcfg.client_chunk):
+                return ev(state, batch)
+
+        return jax.jit(ev_ctx)
+
+    eval_fn = _jit_eval() if eval_batches else None
     # ONE cycling iterator for the whole run: a list of eval batches is
     # rotated through (not stuck on its first element), and a generator is
     # consumed once then replayed instead of being drained mid-run. On
@@ -247,9 +278,13 @@ def train(
     ring = MetricsRing(tcfg.prefetch, _sink)
     rounds_done = ckpt_round = start_round
     remaining = max(rounds - start_round, 0)
+    # with a mesh, prefetched batches are staged directly onto their client
+    # shards (per-device slices of the leading axis) instead of device 0
+    stage_sharding = (client_sharding(tcfg.mesh)
+                      if tcfg.mesh is not None else None)
     for i, (batch, sched) in enumerate(
             pipeline_rounds(batches, sched_iter, depth=tcfg.prefetch,
-                            num_rounds=remaining)):
+                            num_rounds=remaining, device=stage_sharding)):
         r = start_round + i + 1  # absolute 1-based round index
         state, metrics = round_fn(state, batch, sched)
         rounds_done = r

@@ -179,3 +179,36 @@ def specs_tree(mesh: Mesh, value_tree: PyTree, axes_tree: PyTree, rules=None):
         for v, a in zip(vals, axes)
     ]
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# The client axis as a mesh resource. The round path (core/algorithms.py
+# shard_round_fn, train/loop.py staging) places every leading-client-axis
+# leaf — towers, per-client opt state, schedule rows, batches — over the
+# "client" logical axes and replicates everything else.
+# ---------------------------------------------------------------------------
+
+
+def client_mesh_axes(mesh: Mesh) -> tuple:
+    """The mesh axes the MTSL client dimension shards over: the
+    DEFAULT_RULES["client"] axes (("pod","data")) present in `mesh`."""
+    return tuple(a for a in DEFAULT_RULES["client"] if a in mesh.shape)
+
+
+def client_axis_size(mesh: Mesh) -> int:
+    """Total number of client shards: the product of the client mesh axes'
+    sizes (1 on a mesh with neither axis — fully replicated)."""
+    return _axis_size(mesh, client_mesh_axes(mesh))
+
+
+def client_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding placing a leaf's LEADING axis over the client mesh
+    axes (all other dims replicated)."""
+    axes = client_mesh_axes(mesh)
+    if not axes:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

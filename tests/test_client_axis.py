@@ -1,0 +1,221 @@
+"""The client execution axis (core/client_axis.py, core/scan_round.py).
+
+  * `client_map` is plain `jax.vmap` by default and an exact chunked
+    scan-over-clients under an ambient `client_axis(chunk=c)` context.
+  * Every registered algorithm's CHUNKED round (shard_round_fn with
+    client_chunk, no mesh) matches its dense round trajectory — full,
+    masked, and straggler-budget schedules.
+  * The host-driven mtsl scan round (build_mtsl_scan_round) matches the
+    dense mtsl round across sgd/momentum/adamw and masked schedules.
+  * Compile reuse: two different M values at the same chunk share ONE
+    compiled executable per scan kernel (the flat-compile-vs-M contract
+    behind benchmarks/scaling.py).
+"""
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.configs import get_config
+from repro.core.algorithms import (
+    HParams,
+    get_algorithm,
+    jit_round_fn,
+    list_algorithms,
+    shard_round_fn,
+)
+from repro.core.client_axis import client_axis, client_map
+from repro.core.scan_round import (
+    build_mtsl_scan_round,
+    scan_round_compile_counts,
+)
+from repro.core.schedule import ClientSchedule, full_schedule
+from repro.models import build_model
+from repro.optim import adamw, momentum, sgd
+
+# ONE model instance for the whole module: the scan kernels are cached on
+# the model object itself, so the compile-reuse test below observes every
+# scan round this file runs.
+CFG = get_config("paper-mlp", smoke=True)
+MODEL = build_model(CFG)
+ALL_ALGS = sorted(list_algorithms())
+
+
+def make_batch(M, rows, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "image": jnp.asarray(
+            rng.normal(size=(M, rows, CFG.image_size, CFG.image_size))
+            .astype(np.float32)),
+        "label": jnp.asarray(
+            rng.integers(0, CFG.num_classes, size=(M, rows)), jnp.int32),
+    }
+
+
+def assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- client_map
+
+
+def test_client_map_default_is_vmap():
+    x = jnp.arange(24.0).reshape(4, 6)
+    w = jnp.ones((6,))
+    fn = lambda xi, wi: jnp.tanh(xi * wi).sum()  # noqa: E731
+    got = client_map(fn, x, w, in_axes=(0, None))
+    want = jax.vmap(fn, in_axes=(0, None))(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 4, 8])
+def test_client_map_chunked_matches_vmap(chunk):
+    x = jnp.arange(32.0).reshape(8, 4)
+    y = jnp.arange(8.0)
+    w = jnp.full((4,), 0.5)
+    fn = lambda xi, yi, wi: (jnp.sin(xi * wi) + yi).sum()  # noqa: E731
+    want = jax.vmap(fn, in_axes=(0, 0, None))(x, y, w)
+    with client_axis(chunk=chunk):
+        got = client_map(fn, x, y, w, in_axes=(0, 0, None))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_client_map_chunked_inside_jit():
+    x = jnp.arange(16.0).reshape(8, 2)
+
+    @jax.jit
+    def run(x):
+        return client_map(lambda xi: (xi ** 2).sum(), x)
+
+    with client_axis(chunk=2):
+        got = run(x)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray((x ** 2).sum(-1)), rtol=1e-6)
+
+
+def test_client_map_validation():
+    x = jnp.zeros((6, 2))
+    with client_axis(chunk=4):  # 6 % 4 != 0
+        with pytest.raises(ValueError, match="divisible"):
+            client_map(lambda xi: xi.sum(), x)
+    with pytest.raises(ValueError, match="in_axes"):
+        client_map(lambda xi: xi.sum(), x, in_axes=1)
+    with pytest.raises(ValueError, match="chunk"):
+        with client_axis(chunk=0):
+            pass
+
+
+def test_client_map_chunk_ge_m_falls_back_to_vmap():
+    x = jnp.arange(8.0).reshape(4, 2)
+    with client_axis(chunk=16):
+        got = client_map(lambda xi: xi.sum(), x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x.sum(-1)))
+
+
+# ----------------------------------------- chunked rounds, every algorithm
+
+
+def _schedules(M, local_steps):
+    full = full_schedule(M, local_steps)
+    masked = ClientSchedule(
+        mask=jnp.asarray([1.0, 0.0] * (M // 2), jnp.float32),
+        budget=jnp.asarray(
+            [max(local_steps, 1), 1] * (M // 2), jnp.int32))
+    return {"full": full, "masked": masked}
+
+
+@pytest.mark.parametrize("alg_name", ALL_ALGS)
+@pytest.mark.parametrize("sched_name", ["full", "masked"])
+def test_chunked_round_matches_dense(alg_name, sched_name):
+    """shard_round_fn(client_chunk=2, mesh=None): scan-over-clients is a
+    pure execution strategy — 3-round trajectories match the dense round
+    for every algorithm, with masked participation and straggler budgets
+    exercised (the budget=1 entries make stragglers drop local steps)."""
+    M, ls = 4, 1 if alg_name == "mtsl" else 2
+    alg = get_algorithm(alg_name)
+    hp = HParams(lr=0.1, local_steps=ls)
+    spr = alg.steps_per_round(hp)
+    sched = _schedules(M, ls)[sched_name]
+    batch = make_batch(M, 8 * spr)
+
+    dense = jit_round_fn(alg, MODEL, M, hp)
+    chunked = shard_round_fn(alg, MODEL, M, hp, client_chunk=2)
+    s_d = alg.init_state(MODEL, jax.random.PRNGKey(0), M, hp)
+    s_c = alg.init_state(MODEL, jax.random.PRNGKey(0), M, hp)
+    for _ in range(3):
+        s_d, m_d = dense(s_d, batch, sched)
+        s_c, m_c = chunked(s_c, batch, sched)
+        np.testing.assert_allclose(float(m_d["loss"]), float(m_c["loss"]),
+                                   rtol=1e-4, atol=1e-5)
+    assert_trees_close(s_d, s_c)
+
+
+# -------------------------------------------------- host-driven scan round
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adamw"])
+@pytest.mark.parametrize("sched_name", ["full", "masked"])
+def test_scan_round_matches_dense_mtsl(opt_name, sched_name):
+    M, chunk = 8, 4
+    opt = {"sgd": None, "momentum": momentum(0.1),
+           "adamw": adamw(0.1)}[opt_name]
+    hp = HParams(lr=0.1, local_steps=1, optimizer=opt)
+    alg = get_algorithm("mtsl")
+    sched = _schedules(M, 1)[sched_name]
+    batch = make_batch(M, 8)
+
+    dense = jit_round_fn(alg, MODEL, M, hp)
+    scan = build_mtsl_scan_round(MODEL, M, hp, chunk=chunk)
+    s_d = alg.init_state(MODEL, jax.random.PRNGKey(0), M, hp)
+    s_s = alg.init_state(MODEL, jax.random.PRNGKey(0), M, hp)
+    for _ in range(3):
+        s_d, m_d = dense(s_d, batch, sched)
+        s_s, m_s = scan(s_s, batch, sched)
+        np.testing.assert_allclose(float(m_d["loss"]), float(m_s["loss"]),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(m_d["acc"]), float(m_s["acc"]),
+                                   rtol=1e-6, atol=1e-6)
+    assert_trees_close(s_d, s_s)
+
+
+def test_scan_round_rejects_unsupported():
+    hp = HParams(lr=0.1, local_steps=1)
+    with pytest.raises(ValueError, match="divisible"):
+        build_mtsl_scan_round(MODEL, 6, hp, chunk=4)
+    with pytest.raises(ValueError, match="accumulation"):
+        build_mtsl_scan_round(MODEL, 8, hp.with_updates(microbatches=2),
+                              chunk=4)
+    round_fn = build_mtsl_scan_round(MODEL, 4, hp, chunk=2)
+    alg = get_algorithm("mtsl")
+    state = alg.init_state(MODEL, jax.random.PRNGKey(0), 4, hp)
+    sched = full_schedule(4, 1)._replace(
+        sizes=jnp.full((4,), 8, jnp.int32))
+    with pytest.raises(ValueError, match="sizes"):
+        round_fn(state, make_batch(4, 8), sched)
+
+
+def test_scan_round_one_compile_across_m():
+    """TWO different M values with the same (model, chunk, batch width,
+    optimizer) reuse literally the same three compiled kernels — the
+    compiled-shape count stays at 1 after running both. This is the
+    benchmarks/scaling.py flat-compile contract."""
+    chunk, width = 4, 8
+    hp = HParams(lr=0.1, local_steps=1)
+    alg = get_algorithm("mtsl")
+    for M in (8, 16):
+        round_fn = build_mtsl_scan_round(MODEL, M, hp, chunk=chunk)
+        state = alg.init_state(MODEL, jax.random.PRNGKey(0), M, hp)
+        state, _ = round_fn(state, make_batch(M, width), None)
+    counts = scan_round_compile_counts(MODEL, chunk, lr=hp.lr)
+    assert counts == {"grads": 1, "tower_update": 1, "server_update": 1}, \
+        counts

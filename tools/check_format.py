@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Deterministic house-format check (no third-party formatter needed).
+
+``ruff format --check`` in CI is advisory-only because the full formatter
+cannot run in every dev environment (this repo's hermetic container has no
+ruff binary and installing one is not allowed). This script enforces the
+*deterministic, editor-agnostic* subset of the house style that never needs
+a formatter to fix and never disagrees with ruff-format:
+
+  * no tab characters in source lines (4-space indents);
+  * no trailing whitespace;
+  * LF line endings (no CR/CRLF);
+  * files end with EXACTLY one trailing newline (non-empty files).
+
+Checked over every git-tracked ``*.py`` plus workflow/config text files.
+``--fix`` rewrites violations in place (what the one-shot tree cleanup
+used); CI runs the bare check as a BLOCKING lint step.
+
+    python tools/check_format.py          # check, exit 1 on violations
+    python tools/check_format.py --fix    # rewrite files in place
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+SUFFIXES = {".py", ".yml", ".yaml", ".toml", ".md", ".cfg", ".ini"}
+# markdown uses two trailing spaces as a hard line break — only strip
+# trailing whitespace where it is semantically inert
+STRIP_TRAILING = {".py", ".yml", ".yaml", ".toml", ".cfg", ".ini"}
+TABS_FORBIDDEN = {".py", ".yml", ".yaml"}
+
+
+def tracked_files(root: Path) -> list[Path]:
+    out = subprocess.run(["git", "ls-files", "-z"], cwd=root,
+                         capture_output=True, text=True, check=True)
+    return [root / f for f in out.stdout.split("\0")
+            if f and Path(f).suffix in SUFFIXES]
+
+
+def check_file(path: Path, fix: bool) -> list[str]:
+    raw = path.read_bytes()
+    if not raw:
+        return []
+    problems = []
+    text = raw.decode("utf-8")
+    suffix = path.suffix
+    if "\r" in text:
+        problems.append("CR/CRLF line ending")
+        text = text.replace("\r\n", "\n").replace("\r", "\n")
+    lines = text.split("\n")
+    for i, line in enumerate(lines, 1):
+        if suffix in TABS_FORBIDDEN and "\t" in line:
+            problems.append(f"line {i}: tab character")
+            lines[i - 1] = line = line.replace("\t", "    ")
+        if suffix in STRIP_TRAILING and line != line.rstrip():
+            problems.append(f"line {i}: trailing whitespace")
+            lines[i - 1] = line.rstrip()
+    text = "\n".join(lines)
+    if not text.endswith("\n") or text.endswith("\n\n"):
+        problems.append("file must end with exactly one newline")
+        text = text.rstrip("\n") + "\n"
+    if problems and fix:
+        path.write_bytes(text.encode("utf-8"))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite violations in place")
+    args = ap.parse_args(argv)
+    root = Path(__file__).resolve().parent.parent
+    bad = 0
+    for path in tracked_files(root):
+        problems = check_file(path, args.fix)
+        if problems:
+            bad += 1
+            rel = path.relative_to(root)
+            verb = "fixed" if args.fix else "FAIL"
+            for p in problems:
+                print(f"{verb}: {rel}: {p}")
+    if bad and not args.fix:
+        print(f"\n{bad} file(s) violate the house format; "
+              f"run: python tools/check_format.py --fix")
+        return 1
+    print(f"format check: {'fixed' if args.fix else 'clean'} "
+          f"({bad} file(s) with violations)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
