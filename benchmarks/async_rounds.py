@@ -1,0 +1,130 @@
+"""Async vs sync rounds under heavy-tail client capability.
+
+The event-queue engine (train/events.py) exists to beat exactly one
+regime: a fleet whose capability distribution has a heavy tail. The
+synchronous barrier bills every round at the STRAGGLER's finish time, so
+one 20x-slower device inflates the whole run's wall-clock by ~20x. The
+async engine lets the fast clients keep cycling — the straggler's updates
+arrive late, merge down-weighted by staleness, and never hold a round
+hostage.
+
+Both arms run the SAME seeded workload (same model init, same round-batch
+stream, same star(M) topology with the same heavy-tail capability
+profile) and the same total dispatch budget, so the comparison isolates
+the execution model: simulated seconds on the topology clock until the
+multi-task eval accuracy first reaches the target.
+
+Claim asserted (the PR's acceptance criterion): async MTSL reaches the
+target accuracy in LESS simulated wall-clock than the synchronous barrier
+under the heavy-tail profile.
+
+    PYTHONPATH=src python -m benchmarks.async_rounds --quick
+    PYTHONPATH=src python -m benchmarks.async_rounds --json async.json
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.topology import star
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.loop import TrainConfig, train
+
+from benchmarks.common import dump_rows_json, make_source, test_batches
+
+TARGET = 0.9
+SLOWDOWN = 20.0  # the heavy-tail straggler runs at 1/SLOWDOWN capability
+
+
+def _sim_to_target(history, target):
+    for e in history:
+        if e.get("acc_mtl", 0.0) >= target:
+            return e["sim_time"]
+    return None
+
+
+def _arm(model, src, cfg, topo, steps, *, async_mode):
+    from repro.data.pipeline import client_batches
+
+    tcfg = TrainConfig(
+        steps=steps, algorithm="mtsl", lr=0.1, local_steps=1,
+        log_every=0, eval_every=2, seed=0, topology=topo,
+        async_mode=async_mode,
+        # mild decay: the straggler arrives ~SLOWDOWN applies stale, so an
+        # aggressive decay would zero its task's only tower updates;
+        # 0.98^20 ~ 0.67 keeps them counted without letting a stale
+        # direction override fresh progress
+        staleness_decay=0.98 if async_mode else 1.0)
+    batches = client_batches(src, 8, steps=steps, seed=0)
+    tb = test_batches(cfg, src, per_task=32)
+    _, history = train(model, sgd(0.1), batches, tcfg, cfg.num_clients,
+                       eval_batches=[tb], log=lambda s: None)
+    return history
+
+
+def run(quick: bool = False, json_path: str | None = None):
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    src = make_source(cfg, alpha=0.0, seed=0)
+    M = cfg.num_clients
+    caps = np.ones(M)
+    caps[0] = 1.0 / SLOWDOWN
+    topo = star(M).with_capability(caps)
+    steps = 40 if quick else 120
+
+    rows, arms = [], {}
+    for name, async_mode in (("sync", False), ("async", True)):
+        # the async arm gets a proportionally larger DISPATCH budget: its
+        # dispatches are dominated by the cheap fast-client cycles (each
+        # ~1/SLOWDOWN of a sync round on the sim clock), and the metric
+        # compared is the simulated wall-clock to target, not rounds
+        arm_steps = steps * int(SLOWDOWN) // 2 if async_mode else steps
+        history = _arm(model, src, cfg, topo, arm_steps,
+                       async_mode=async_mode)
+        sim = _sim_to_target(history, TARGET)
+        arms[name] = {
+            "sim_s_to_target": sim,
+            "total_sim_s": history[-1]["sim_time"],
+            "final_acc": float(history[-1].get("acc_mtl", float("nan"))),
+            "applies": history[-1]["round"],
+        }
+        rows.append((
+            f"async_rounds/{name}", 0.0,
+            f"sim_s_to_{TARGET}={sim if sim is not None else 'n/a'} "
+            f"total_sim_s={arms[name]['total_sim_s']:.3f} "
+            f"acc={arms[name]['final_acc']:.3f}"))
+
+    s, a = arms["sync"]["sim_s_to_target"], arms["async"]["sim_s_to_target"]
+    beats = a is not None and (s is None or a < s)
+    rows.append(("async_rounds/claim_async_beats_sync_heavy_tail", 0.0,
+                 "PASS" if beats else "FAIL"))
+    if a is not None and s is not None:
+        rows.append(("async_rounds/speedup", 0.0, f"x={s / a:.2f}"))
+    dump_rows_json(json_path, "async_rounds", quick, rows, extra={
+        "target_acc": TARGET,
+        "slowdown": SLOWDOWN,
+        "arms": arms,
+        "claims": {"async_beats_sync_heavy_tail": bool(beats)},
+    })
+    return rows
+
+
+def main(argv=None):
+    from benchmarks.common import enable_compilation_cache
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step budget (CI smoke)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    enable_compilation_cache()
+    for r in run(quick=args.quick or not args.full, json_path=args.json):
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

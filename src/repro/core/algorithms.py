@@ -74,9 +74,11 @@ from repro.core.client_axis import client_axis
 from repro.core.mtsl import (
     TrainState,
     build_eval_step,
+    build_train_phases,
     build_train_step,
     init_state as mtsl_init_state,
 )
+from repro.core.phases import PhaseProgram
 from repro.core.split import replicate_tower
 from repro.optim.optimizers import Optimizer, sgd
 from repro.optim.per_component import ComponentLR
@@ -194,7 +196,21 @@ class Algorithm:
           client axes (everything else replicates). Declare with
           `client_axes_by_keys(...)` for key-based states or a custom
           callable (see fedem). None disables mesh sharding for the
-          algorithm (chunked scan still works).
+          algorithm (chunked scan still works). The event engine reuses the
+          SAME marks to distinguish per-client payload rows from shared
+          components when mixing stale arrivals.
+      phases(model, num_clients, hp) -> core.phases.PhaseProgram: the round
+          as composable (local -> apply) phases, with round_fn their
+          bit-for-bit composition (pinned in tests/test_async_events.py).
+          Drives the event-queue engine (train/events.py); None means the
+          algorithm supports synchronous execution only.
+      replica_avg_all: multi-server replica-sync policy (event engine).
+          False (default): shared leaves average across replicas and each
+          client-axis row is taken from its OWNER replica (the one its
+          client attaches to) — right for states with genuinely per-client
+          rows. True: ALL leaves average elementwise — right for
+          fedavg-family states whose [M, ...] rows are per-client COPIES of
+          one global model (owner-gather alone would never mix replicas).
     """
 
     name: str
@@ -210,6 +226,8 @@ class Algorithm:
     uses_optimizer: bool = False
     donate_state: bool = True
     client_axes: Optional[Callable[[PyTree], PyTree]] = None
+    phases: Optional[Callable[..., PhaseProgram]] = None
+    replica_avg_all: bool = False
     description: str = ""
 
 
@@ -218,6 +236,30 @@ def split_local_steps(batch: PyTree, local_steps: int) -> PyTree:
     return jax.tree.map(
         lambda x: x.reshape((x.shape[0], local_steps, -1) + x.shape[2:]), batch
     )
+
+
+def phase_program(alg: "Algorithm", model, num_clients: int,
+                  hp: HParams) -> PhaseProgram:
+    """Build `alg`'s declared phase program (local -> apply decomposition of
+    its round). Raises for algorithms without one — event-driven execution
+    requires the phase contract."""
+    if alg.phases is None:
+        raise ValueError(
+            f"algorithm {alg.name!r} declares no phase program; "
+            "event-driven (async) execution needs one — register the "
+            "algorithm with phases=... (see core/phases.py)")
+    return alg.phases(model, num_clients, hp)
+
+
+def _with_round_batch(prog: PhaseProgram, local_steps: int) -> PhaseProgram:
+    """Adapt a federation phase program (which expects [M, k, b, ...]
+    local-step batches) to the registry's [M, k*b, ...] round batches."""
+
+    def local(state, batch, schedule):
+        return prog.local(state, split_local_steps(batch, local_steps),
+                          schedule)
+
+    return PhaseProgram(local, prog.apply)
 
 
 def num_rounds(total_steps: int, steps_per_round: int) -> int:
@@ -315,8 +357,13 @@ def shard_round_fn(alg: "Algorithm", model, num_clients: int, hp: HParams,
                     new_state, alg.client_axes(new_state), cshard, rshard)
             return new_state, metrics
 
+    # Donate the [M, ...] client-axis state buffers (reused across rounds)
+    # AND the staged round batch (consumed exactly once — the pipeline
+    # device_puts a fresh one per round) so the sharded round runs without
+    # reallocating its largest buffers. Skipped on CPU, where donation is
+    # unimplemented and jax would warn and ignore it.
     donate = alg.donate_state and jax.default_backend() != "cpu"
-    return jax.jit(wrapped, donate_argnums=(0,) if donate else ())
+    return jax.jit(wrapped, donate_argnums=(0, 1) if donate else ())
 
 
 def place_algorithm_state(alg: "Algorithm", state: PyTree, mesh) -> PyTree:
@@ -490,6 +537,28 @@ def _mtsl_round(model, num_clients, hp: HParams):
     return round_fn
 
 
+def _mtsl_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    opt = _mtsl_optimizer(hp)
+    clr = hp.component_lr
+    if clr is None:  # paper's Eq. 9 policy: server LR ~ 1/M
+        clr = lr_policy.server_scaled(num_clients, server_scale=2.0 / num_clients)
+    local_step, apply_step = build_train_phases(
+        model, opt, num_clients, "mtsl", microbatches=hp.microbatches)
+
+    def local(state, batch, schedule):
+        mask = None if schedule is None else schedule.mask
+        sizes = None if schedule is None else schedule.sizes
+        grads, metrics = local_step(state, batch, mask, sizes)
+        return {"grads": grads, "metrics": metrics}
+
+    def apply(state, payload, schedule):
+        mask = None if schedule is None else schedule.mask
+        return apply_step(state, payload["grads"], payload["metrics"],
+                          clr, mask)
+
+    return PhaseProgram(local, apply)
+
+
 def _mtsl_eval(model, num_clients):
     ev = build_eval_step(model, num_clients)
 
@@ -514,6 +583,7 @@ register_algorithm(Algorithm(
     uses_optimizer=True,
     # towers AND the tower slices of the optimizer moments are per-client
     client_axes=client_axes_by_keys("towers"),
+    phases=_mtsl_phases,
     description="Non-federated multi-task split learning (paper Alg. 1): "
                 "private towers, shared server, implicit aggregation.",
 ))
@@ -541,6 +611,13 @@ def _splitfed_round(model, num_clients, hp: HParams):
     return round_fn
 
 
+def _splitfed_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    return _with_round_batch(
+        federation.build_splitfed_phases(model, hp.lr, num_clients,
+                                         hp.local_steps),
+        hp.local_steps)
+
+
 def _shared_state_eval(model, num_clients):
     """Eval for {"towers","server"} states (splitfed shares mtsl's layout)."""
     ev = build_eval_step(model, num_clients)
@@ -565,6 +642,7 @@ register_algorithm(Algorithm(
     round_events=_splitfed_events,
     serve_params=_identity,  # state IS {"towers","server"}
     client_axes=client_axes_by_keys("towers"),
+    phases=_splitfed_phases,
     description="SplitFed [Thapa et al.]: split learning with fed-averaged "
                 "client parts every round.",
 ))
@@ -588,6 +666,14 @@ def _fedavg_round(model, num_clients, hp: HParams):
         return rf(state, split_local_steps(batch, hp.local_steps), schedule)
 
     return round_fn
+
+
+def _fedavg_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    return _with_round_batch(
+        federation.build_fedprox_phases(model, hp.lr, num_clients,
+                                        hp.local_steps, mu=0.0,
+                                        sample_weighted=hp.sample_weighted),
+        hp.local_steps)
 
 
 # full-model exchange only: traffic is independent of the samples sent
@@ -619,6 +705,10 @@ register_algorithm(Algorithm(
     round_events=_fedavg_events,
     # per-client full-model replicas: both halves carry the client axis
     client_axes=client_axes_by_keys("towers", "servers"),
+    phases=_fedavg_phases,
+    # the [M, ...] rows are COPIES of one global model: replicas sync by
+    # elementwise averaging everything
+    replica_avg_all=True,
     description="FedAvg [McMahan et al.]: classic federation of the full "
                 "model; exhibits client drift under heterogeneity.",
 ))
@@ -649,6 +739,13 @@ def _fedem_round(model, num_clients, hp: HParams):
     return round_fn
 
 
+def _fedem_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    return _with_round_batch(
+        federation.build_fedem_phases(model, hp.lr, num_clients,
+                                      hp.num_components, hp.local_steps),
+        hp.local_steps)
+
+
 def _fedem_eval(model, num_clients):
     ev = federation.build_fedem_eval_step(model, num_clients)
 
@@ -677,6 +774,7 @@ register_algorithm(Algorithm(
     # responsibility matrix pi is [M, K] per-client
     client_axes=lambda state: (jax.tree.map(lambda _: False, state[0]),
                                jax.tree.map(lambda _: True, state[1])),
+    phases=_fedem_phases,
     description="FedEM [Marfoq et al. 2021]: mixture of K shared full models "
                 "with per-client responsibilities.",
 ))
@@ -698,6 +796,14 @@ def _fedprox_round(model, num_clients, hp: HParams):
     return round_fn
 
 
+def _fedprox_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    return _with_round_batch(
+        federation.build_fedprox_phases(model, hp.lr, num_clients,
+                                        hp.local_steps, hp.prox_mu,
+                                        sample_weighted=hp.sample_weighted),
+        hp.local_steps)
+
+
 # full-model exchange only: traffic is independent of the samples sent
 _fedprox_events = _param_only_events("fedprox")
 
@@ -710,6 +816,8 @@ register_algorithm(Algorithm(
     round_bytes=events_round_bytes(_fedprox_events),
     round_events=_fedprox_events,
     client_axes=client_axes_by_keys("towers", "servers"),
+    phases=_fedprox_phases,
+    replica_avg_all=True,  # same per-client-copies layout as fedavg
     description="FedProx [Li et al. 2020]: FedAvg whose local steps add "
                 "(mu/2)·||p - p_global||² drift damping (hp.prox_mu).",
 ))
@@ -746,6 +854,13 @@ def _parallelsfl_round(model, num_clients, hp: HParams):
     return round_fn
 
 
+def _parallelsfl_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    return _with_round_batch(
+        federation.build_parallelsfl_phases(model, hp.lr, num_clients,
+                                            hp.local_steps),
+        hp.local_steps)
+
+
 def _parallelsfl_from_tree(tree):
     """Checkpoint restore hook: pre-schedule-era states (no "cidx") get the
     round-robin map they were trained with backfilled."""
@@ -773,6 +888,7 @@ register_algorithm(Algorithm(
     # "servers" here is [C, ...] per-CLUSTER replicas (replicated over the
     # mesh); only towers and the client->cluster map are per-client
     client_axes=client_axes_by_keys("towers", "cidx"),
+    phases=_parallelsfl_phases,
     description="ParallelSFL [Liao et al. 2024]: cluster-wise split "
                 "federation — towers fed-average within their cluster, "
                 "per-cluster server replicas merge each round "
@@ -807,6 +923,13 @@ def _smofi_round(model, num_clients, hp: HParams):
     return round_fn
 
 
+def _smofi_phases(model, num_clients, hp: HParams) -> PhaseProgram:
+    return _with_round_batch(
+        federation.build_smofi_phases(model, hp.lr, num_clients,
+                                      hp.local_steps, hp.momentum),
+        hp.local_steps)
+
+
 _smofi_events = _alg_events("smofi", local_steps=lambda hp: hp.local_steps)
 
 
@@ -820,6 +943,7 @@ register_algorithm(Algorithm(
     serve_params=lambda state: {"towers": state["towers"],
                                 "server": state["server"]},
     client_axes=client_axes_by_keys("towers"),
+    phases=_smofi_phases,
     description="SMoFi [Yang et al. 2025]: splitfed whose per-client server "
                 "replicas fuse their momentum buffers at every local step "
                 "(hp.momentum).",

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client_axis import client_map
+from repro.core.phases import PhaseProgram, compose_phases
 from repro.core.schedule import (
     ClientSchedule,
     broadcast_weights,
@@ -177,15 +178,25 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
     reproduce the unweighted average bit-for-bit, see
     schedule.participation_mean).
     """
+    return compose_phases(
+        build_fedprox_phases(model, lr, num_clients, local_steps, mu=mu,
+                             sample_weighted=sample_weighted),
+        lambda: full_schedule(num_clients, local_steps))
+
+
+def build_fedprox_phases(model: Model, lr: float, num_clients: int,
+                         local_steps: int, mu: float = 0.0,
+                         sample_weighted: bool = False) -> PhaseProgram:
+    """FedProx as a phase program (see build_fedprox_round for the round
+    semantics). `local` runs every client's proximal local steps and
+    returns {"pcs": per-client params, "losses": [M]}; `apply` is the
+    round-end federation average over the apply-time schedule's
+    participants."""
     loss_fn = full_model_loss(model)
 
-    def round_fn(params, batch, schedule: Optional[ClientSchedule] = None):
-        if schedule is None:
-            schedule = full_schedule(num_clients, local_steps)
+    def local_phase(params, batch, schedule: ClientSchedule):
         steps_t = jnp.arange(local_steps)
         smask = schedule_sample_mask(schedule, batch)
-        fed_w = (schedule.sizes.astype(jnp.float32)
-                 if sample_weighted and schedule.sizes is not None else None)
 
         def client_run(tp, sp, client_batch, budget, sm):
             anchor = {"tower": tp, "server": sp}
@@ -213,6 +224,12 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
         pcs, losses = _vmap_with_smask(
             client_run, params["towers"], params["servers"], batch,
             schedule.budget, smask)
+        return {"pcs": pcs, "losses": losses}
+
+    def apply_phase(params, payload, schedule: ClientSchedule):
+        pcs, losses = payload["pcs"], payload["losses"]
+        fed_w = (schedule.sizes.astype(jnp.float32)
+                 if sample_weighted and schedule.sizes is not None else None)
         # federation: average over participants (optionally weighted by
         # transmitted samples), broadcast back to everyone
         avg = jax.tree.map(
@@ -221,7 +238,7 @@ def build_fedprox_round(model: Model, lr: float, num_clients: int,
         losses = losses * schedule.mask
         return new, {"loss": jnp.sum(losses), "per_task": losses}
 
-    return round_fn
+    return PhaseProgram(local_phase, apply_phase)
 
 
 def build_fedavg_round(model: Model, lr: float, num_clients: int,
@@ -245,14 +262,24 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
     contributes zero gradient to the server and its tower holds; the tower
     federation averages over participants only. With `schedule.sizes`, each
     client's per-step loss runs over its first sizes[m] samples only."""
+    return compose_phases(
+        build_splitfed_phases(model, lr, num_clients, local_steps),
+        lambda: full_schedule(num_clients, local_steps))
+
+
+def build_splitfed_phases(model: Model, lr: float, num_clients: int,
+                          local_steps: int) -> PhaseProgram:
+    """SplitFed as a phase program (see build_splitfed_round). `local` is
+    the whole per-step split-learning scan — the cohort trains JOINTLY
+    against the central server, so the scanned server is a SHARED payload
+    component alongside the per-client towers; `apply` federates the towers
+    over the apply-time participants and commits the scanned server."""
     M = num_clients
     from repro.core.mtsl import make_loss_fn
 
     loss_fn = make_loss_fn(model, M)
 
-    def round_fn(params, batch, schedule: Optional[ClientSchedule] = None):
-        if schedule is None:
-            schedule = full_schedule(M, local_steps)
+    def local_phase(params, batch, schedule: ClientSchedule):
         act = step_activity(schedule.mask, schedule.budget, local_steps)
         smask = schedule_sample_mask(schedule, batch)
 
@@ -266,13 +293,17 @@ def build_splitfed_round(model: Model, lr: float, num_clients: int,
 
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
         p, per = jax.lax.scan(one_step, params, (mbs, act))
+        return {"params": p, "per": per}
+
+    def apply_phase(params, payload, schedule: ClientSchedule):
+        p, per = payload["params"], payload["per"]
         towers = jax.tree.map(
             lambda x: participation_bcast_mean(x, schedule.mask), p["towers"])
         new = {"towers": towers, "server": p["server"]}
         per_last = per[-1] * schedule.mask
         return new, {"loss": jnp.sum(per_last), "per_task": per_last}
 
-    return round_fn
+    return PhaseProgram(local_phase, apply_phase)
 
 
 def cluster_assignment(num_clients: int, num_clusters: int, capability=None):
@@ -330,23 +361,34 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
     replica and towers for the round. With `schedule.sizes`, each client's
     per-step gradient runs over its first sizes[m] samples only.
     """
+    return compose_phases(
+        build_parallelsfl_phases(model, lr, num_clients, local_steps),
+        lambda: full_schedule(num_clients, local_steps))
+
+
+def _cluster_wmean(x, w, cidx, C):
+    """[M, ...] values, [M] weights -> [C, ...] weighted means
+    over each cluster's ACTIVE members (all-zero clusters -> 0)."""
+    wc = jax.ops.segment_sum(w, cidx, num_segments=C)  # [C]
+    s = jax.ops.segment_sum(x * broadcast_weights(w, x), cidx,
+                            num_segments=C)
+    return s / broadcast_weights(jnp.maximum(wc, 1.0), s), wc
+
+
+def build_parallelsfl_phases(model: Model, lr: float, num_clients: int,
+                             local_steps: int) -> PhaseProgram:
+    """ParallelSFL as a phase program (see build_parallelsfl_round).
+    `local` is the per-step cluster-split scan — towers AND the C server
+    replicas train jointly, so the replicas are shared payload; `apply` is
+    the round-end within-cluster tower federation + global replica merge
+    over the apply-time participants."""
     loss_fn = full_model_loss(model)
 
-    def round_fn(params, batch, schedule: Optional[ClientSchedule] = None):
-        if schedule is None:
-            schedule = full_schedule(num_clients, local_steps)
+    def local_phase(params, batch, schedule: ClientSchedule):
         cidx = params["cidx"]
         C = jax.tree.leaves(params["servers"])[0].shape[0]
         act = step_activity(schedule.mask, schedule.budget, local_steps)
         smask = schedule_sample_mask(schedule, batch)
-
-        def _cluster_wmean(x, w):
-            """[M, ...] values, [M] weights -> [C, ...] weighted means
-            over each cluster's ACTIVE members (all-zero clusters -> 0)."""
-            wc = jax.ops.segment_sum(w, cidx, num_segments=C)  # [C]
-            s = jax.ops.segment_sum(x * broadcast_weights(w, x), cidx,
-                                    num_segments=C)
-            return s / broadcast_weights(jnp.maximum(wc, 1.0), s), wc
 
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
 
@@ -366,7 +408,7 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
                 towers, grads["tower"])
 
             def upd_server(p, g):
-                gm, wc = _cluster_wmean(g, a)
+                gm, wc = _cluster_wmean(g, a, cidx, C)
                 stepped = p - lr * gm.astype(p.dtype)
                 # a cluster with no active member this step holds its replica
                 return jnp.where(broadcast_weights(wc > 0, p), stepped, p)
@@ -376,6 +418,13 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
 
         (towers, servers), per = jax.lax.scan(
             one_step, (params["towers"], params["servers"]), (mbs, act))
+        return {"towers": towers, "servers": servers, "per": per}
+
+    def apply_phase(params, payload, schedule: ClientSchedule):
+        cidx = params["cidx"]
+        C = jax.tree.leaves(params["servers"])[0].shape[0]
+        towers, servers, per = (payload["towers"], payload["servers"],
+                                payload["per"])
         # end of round: fed-average towers within each cluster over the
         # round's PARTICIPANTS (idle clusters hold), merge the replicas of
         # clusters that trained and broadcast the result to all C
@@ -383,7 +432,7 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
         has = (wc > 0).astype(schedule.mask.dtype)
 
         def merge_towers(x):
-            m, _ = _cluster_wmean(x, schedule.mask)
+            m, _ = _cluster_wmean(x, schedule.mask, cidx, C)
             return jnp.where(broadcast_weights(wc[cidx] > 0, x), m[cidx], x)
 
         towers = jax.tree.map(merge_towers, towers)
@@ -394,7 +443,7 @@ def build_parallelsfl_round(model: Model, lr: float, num_clients: int,
         per_last = per[-1] * schedule.mask
         return new, {"loss": jnp.sum(per_last), "per_task": per_last}
 
-    return round_fn
+    return PhaseProgram(local_phase, apply_phase)
 
 
 def eval_parallelsfl(model: Model, num_clients: int):
@@ -445,11 +494,21 @@ def build_smofi_round(model: Model, lr: float, num_clients: int,
     `schedule.sizes`, each client's per-step gradient runs over its first
     sizes[m] samples only.
     """
+    return compose_phases(
+        build_smofi_phases(model, lr, num_clients, local_steps, momentum),
+        lambda: full_schedule(num_clients, local_steps))
+
+
+def build_smofi_phases(model: Model, lr: float, num_clients: int,
+                       local_steps: int, momentum: float) -> PhaseProgram:
+    """SMoFi as a phase program (see build_smofi_round). `local` is the
+    per-step momentum-fused split scan — the shared server and fused
+    buffer are shared payload beside the per-client towers; `apply`
+    federates the towers over the apply-time participants and commits
+    server + momentum."""
     loss_fn = full_model_loss(model)
 
-    def round_fn(state, batch, schedule: Optional[ClientSchedule] = None):
-        if schedule is None:
-            schedule = full_schedule(num_clients, local_steps)
+    def local_phase(state, batch, schedule: ClientSchedule):
         act = step_activity(schedule.mask, schedule.budget, local_steps)
         smask = schedule_sample_mask(schedule, batch)
         mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # [k, M, b..]
@@ -486,13 +545,18 @@ def build_smofi_round(model: Model, lr: float, num_clients: int,
         (towers, server, smom), per = jax.lax.scan(
             one_step, (state["towers"], state["server"], state["smom"]),
             (mbs, act))
+        return {"towers": towers, "server": server, "smom": smom, "per": per}
+
+    def apply_phase(state, payload, schedule: ClientSchedule):
+        towers, server, smom, per = (payload["towers"], payload["server"],
+                                     payload["smom"], payload["per"])
         new = {"towers": jax.tree.map(
                    lambda x: participation_bcast_mean(x, schedule.mask), towers),
                "server": server, "smom": smom}
         per_last = per[-1] * schedule.mask
         return new, {"loss": jnp.sum(per_last), "per_task": per_last}
 
-    return round_fn
+    return PhaseProgram(local_phase, apply_phase)
 
 
 def init_fedavg_params(model: Model, rng, num_clients: int):
@@ -537,16 +601,37 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
     responsibilities pi[m] are FROZEN for the round. With `schedule.sizes`,
     a client's E- and M-steps run over its first sizes[m] samples only.
     """
+    prog = build_fedem_phases(model, lr, num_clients, num_components,
+                              local_steps)
+
+    def round_fn(components, pi, batch,
+                 schedule: Optional[ClientSchedule] = None):
+        if schedule is None:
+            schedule = full_schedule(pi.shape[0], local_steps)
+        payload = prog.local((components, pi), batch, schedule)
+        (new_components, new_pi), metrics = prog.apply(
+            (components, pi), payload, schedule)
+        return new_components, new_pi, metrics
+
+    return round_fn
+
+
+def build_fedem_phases(model: Model, lr: float, num_clients: int,
+                       num_components: int, local_steps: int) -> PhaseProgram:
+    """FedEM as a phase program over state `(components, pi)` (see
+    build_fedem_round). `local` runs every client's responsibility-weighted
+    local steps on all K components and returns {"comps": per-client
+    component copies, "r_mean": [M, K] mean responsibilities}; `apply`
+    averages the components over the apply-time participants and updates
+    (participants') responsibilities."""
     loss_fn = full_model_loss(model)
 
     def per_sample_losses(comps, mb, sm):
         # comps: [K, ...]; mb: one client's local batch (no client axis)
         return jax.vmap(lambda c: loss_fn(c, mb, sm))(comps)  # [K] (batch-mean)
 
-    def round_fn(components, pi, batch,
-                 schedule: Optional[ClientSchedule] = None):
-        if schedule is None:
-            schedule = full_schedule(pi.shape[0], local_steps)
+    def local_phase(state, batch, schedule: ClientSchedule):
+        components, pi = state
         steps_t = jnp.arange(local_steps)
         smask = schedule_sample_mask(schedule, batch)
 
@@ -577,15 +662,20 @@ def build_fedem_round(model: Model, lr: float, num_clients: int,
 
         comps_per_client, r_mean = _vmap_with_smask(
             client_run, pi, batch, schedule.budget, smask)
+        return {"comps": comps_per_client, "r_mean": r_mean}
+
+    def apply_phase(state, payload, schedule: ClientSchedule):
+        _components, pi = state
+        comps_per_client, r_mean = payload["comps"], payload["r_mean"]
         new_components = jax.tree.map(
             lambda x: participation_mean(x, schedule.mask), comps_per_client)
         r_norm = r_mean / jnp.sum(r_mean, axis=-1, keepdims=True)
         # non-participants keep last round's responsibilities
         new_pi = jnp.where(schedule.mask[:, None] > 0, r_norm, pi)
         loss = jnp.zeros(())  # recomputed by eval; keep the round cheap
-        return new_components, new_pi, {"loss": loss}
+        return (new_components, new_pi), {"loss": loss}
 
-    return round_fn
+    return PhaseProgram(local_phase, apply_phase)
 
 
 # ---------------------------------------------------------------------------

@@ -318,6 +318,37 @@ def build_train_step(
     divides by the SHARED live-sample count (live[m]/microbatches), so the
     uniformly-averaged accumulation equals the whole-batch live-sample mean
     no matter how a client's live prefix falls across the slices."""
+    local_step, apply_step = build_train_phases(
+        model, base_optimizer, num_clients, algorithm, microbatches)
+
+    def train_step(state: TrainState, batch,
+                   component_lr: Optional[ComponentLR] = None,
+                   participation=None, sample_sizes=None):
+        grads, metrics = local_step(state, batch, participation, sample_sizes)
+        return apply_step(state, grads, metrics, component_lr, participation)
+
+    return train_step
+
+
+def build_train_phases(
+    model: Model,
+    base_optimizer: Optimizer,
+    num_clients: int,
+    algorithm: str = "mtsl",
+    microbatches: int = 1,
+) -> tuple:
+    """`build_train_step` split at the smashed-gradient uplink.
+
+    Returns (local_step, apply_step):
+      local_step(state, batch, participation=None, sample_sizes=None)
+          -> (grads, metrics): the whole forward/backward (including the
+          microbatch accumulation scan) against the round-start state.
+      apply_step(state, grads, metrics, component_lr=None,
+          participation=None) -> (TrainState, metrics): the server-side
+          commit — sync_transform's federation all-reduce, the optimizer
+          update, participation tower-freezing, step increment.
+    `build_train_step` is exactly their composition (the seeded goldens pin
+    it); the event engine drives them on its own clock."""
     loss_fn = make_loss_fn(model, num_clients)
     opt = per_component_lr(base_optimizer, is_client_path)
     sync = federation.sync_transform(algorithm, num_clients)
@@ -326,8 +357,7 @@ def build_train_step(
         return jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch, participation, smask, sdenom)
 
-    def train_step(state: TrainState, batch,
-                   component_lr: Optional[ComponentLR] = None,
+    def local_step(state: TrainState, batch,
                    participation=None, sample_sizes=None):
         width = jax.tree.leaves(batch)[0].shape[1]
         smask = (None if sample_sizes is None
@@ -372,7 +402,11 @@ def build_train_step(
         else:
             (loss, metrics), grads = _grads(state.params, batch, participation,
                                             smask)
+        return grads, metrics
 
+    def apply_step(state: TrainState, grads, metrics,
+                   component_lr: Optional[ComponentLR] = None,
+                   participation=None):
         grads = sync(grads)
         updates, opt_state = opt.update(
             grads, state.opt_state, state.params, state.step,
@@ -391,7 +425,7 @@ def build_train_step(
         params = apply_updates(state.params, updates)
         return TrainState(params, opt_state, state.step + 1), metrics
 
-    return train_step
+    return local_step, apply_step
 
 
 def build_eval_step(model: Model, num_clients: int) -> Callable:

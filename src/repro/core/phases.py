@@ -1,0 +1,69 @@
+"""Phase programs: a round as composable (local -> apply) phases.
+
+Every `Algorithm.round_fn` realizes one synchronous ROUND — per-client
+local compute, the uplink of whatever the algorithm transmits (smashed
+gradients, parameter deltas, mixture responsibilities), the server-side
+apply, and the downlink of the refreshed model. The synchronous barrier is
+baked into that opacity: the round cannot be re-timed because its phases
+cannot be named.
+
+A `PhaseProgram` names them:
+
+  local(state, batch, schedule) -> payload
+      everything the CLIENTS of this round compute, reading (but never
+      writing) the round-start state: per-client local steps, split
+      exchanges against the server replica, gradient evaluation. The
+      payload is an opaque pytree — per-client rows ([M, ...] leaves) plus
+      whatever shared components the algorithm's server accumulated while
+      interacting with the cohort (a scanned server, fused momentum, a
+      summed server gradient).
+  apply(state, payload, schedule) -> (new_state, metrics)
+      the SERVER-side commit: federation means over the schedule's
+      participants, optimizer updates, responsibility renormalization.
+      `schedule` at apply time may be a SUBSET of the local-phase schedule
+      (the clients that have reported so far — the event engine in
+      train/events.py applies arrivals as they land).
+
+Contract pinned by tests/test_async_events.py: for every registered
+algorithm, `apply(state, local(state, batch, s), s)` is bit-for-bit the
+legacy `round_fn(state, batch, s)` — the builders in core/federation.py /
+core/mtsl.py ARE the phase bodies, and the synchronous round is their
+composition (`compose_phases`), so the seeded trajectory goldens pin this
+refactor for free.
+
+The event-queue engine (train/events.py) drives the same two functions on
+its own clock: `local` at cohort dispatch, `apply` at client arrival, with
+staleness riding the schedule (`ClientSchedule.staleness`).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+PyTree = Any
+
+
+class PhaseProgram(NamedTuple):
+    """One round, split at the uplink: client-side `local`, server-side
+    `apply`. Both are jit-able with the schedule as a traced pytree."""
+
+    local: Callable[[PyTree, PyTree, Any], PyTree]
+    apply: Callable[[PyTree, PyTree, Any], tuple]
+
+
+def compose_phases(program: PhaseProgram,
+                   default_schedule: Optional[Callable] = None) -> Callable:
+    """The synchronous round as the phases' composition.
+
+    Returns `round_fn(state, batch, schedule=None)`; a None schedule is
+    filled by `default_schedule()` (the all-clients/full-budget round)
+    before either phase sees it, so the composed round keeps the legacy
+    signature and trace.
+    """
+
+    def round_fn(state, batch, schedule=None):
+        if schedule is None and default_schedule is not None:
+            schedule = default_schedule()
+        payload = program.local(state, batch, schedule)
+        return program.apply(state, payload, schedule)
+
+    return round_fn

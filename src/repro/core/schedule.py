@@ -72,11 +72,20 @@ class ClientSchedule(NamedTuple):
             means every client uses its whole batch row. Masked clients
             carry 0; participants carry >= 1; the per-step total is
             conserved across the round (see capability_batch_sizes).
+    staleness: optional [M] int32 apply-time staleness — how many server
+            applies landed between this cohort's dispatch and the arrival
+            being applied (event-driven execution, train/events.py). None
+            (always, on the synchronous path) keeps the legacy trace; the
+            event engine sets it on the APPLY-time schedule so staleness
+            rides into jit exactly like the mask does, and
+            `staleness_weights` turns it into FedAsync-style mixing
+            weights.
     """
 
     mask: jnp.ndarray
     budget: jnp.ndarray
     sizes: Optional[jnp.ndarray] = None
+    staleness: Optional[jnp.ndarray] = None
 
     @property
     def num_participants(self) -> int:
@@ -385,6 +394,22 @@ def participation_bcast_mean(
     to every client (the federation 'download')."""
     m = participation_mean(x, mask, weights)[None]
     return jnp.broadcast_to(m, x.shape)
+
+
+def staleness_weights(staleness: jnp.ndarray, decay: float,
+                      max_staleness: Optional[int] = None) -> jnp.ndarray:
+    """[M] int staleness -> [M] float32 FedAsync mixing weights.
+
+    w[m] = decay ** staleness[m], hard-zeroed beyond `max_staleness` (an
+    update staler than the cutoff is dropped entirely). decay=1.0 with no
+    cutoff is all-ones — staleness-unaware mixing. Jit-safe: staleness is
+    traced (it rides ClientSchedule.staleness), decay/max_staleness are
+    static config."""
+    s = staleness.astype(jnp.float32)
+    w = jnp.power(jnp.float32(decay), s)
+    if max_staleness is not None:
+        w = w * (s <= jnp.float32(max_staleness)).astype(jnp.float32)
+    return w
 
 
 def step_activity(mask: jnp.ndarray, budget: jnp.ndarray,

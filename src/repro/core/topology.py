@@ -398,3 +398,33 @@ def round_walltime(
         arr = np.asarray(compute_s, np.float64).reshape(-1)
         comp = float(arr.max()) if arr.size else 0.0
     return comp + comm
+
+
+def client_transfer_seconds(
+    topo: Topology,
+    events: Sequence[TrafficEvent],
+) -> np.ndarray:
+    """[M] per-CLIENT transfer seconds for one round's events.
+
+    Where `round_walltime` folds events into ONE barrier time (max over a
+    phase, sum over phases — every client waits for the slowest path), this
+    is the event engine's view: client m only waits for the transfers it is
+    an endpoint of. Within a phase a client's transfers are parallel (max);
+    across phases they are serial (sum). Events between servers only (e.g.
+    replica-merge backbone traffic) belong to no client and don't appear —
+    the engine bills those to the apply side, not to client arrivals.
+    """
+    idx = {name: m for m, name in enumerate(topo.clients)}
+    per: dict[tuple[int, int], float] = {}
+    for e in events:
+        m = idx.get(e.src, idx.get(e.dst))
+        if m is None:
+            continue
+        t = topo.link(e.src, e.dst).transfer_s(e.bytes)
+        key = (m, e.phase)
+        if t > per.get(key, 0.0):
+            per[key] = t
+    out = np.zeros((topo.num_clients,), np.float64)
+    for (m, _), t in per.items():
+        out[m] += t
+    return out

@@ -56,7 +56,7 @@ from repro.core.topology import TOPOLOGIES, build_topology, mbps
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
-from repro.launch.mesh import make_mesh_from_spec
+from repro.launch.mesh import make_mesh_from_spec, parse_mesh_spec
 from repro.models.registry import build_model
 from repro.optim import adamw, sgd
 from repro.train.loop import TrainConfig, train
@@ -138,6 +138,20 @@ def main(argv=None):
                     help="one-way latency applied to every declared link")
     ap.add_argument("--sync-every", type=int, default=1,
                     help="multi-server replica sync period, in rounds")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="event-driven asynchronous execution "
+                         "(train/events.py): replace the synchronous round "
+                         "barrier with the staleness-aware event-queue "
+                         "engine — fast clients keep cycling while "
+                         "stragglers' updates arrive late and merge "
+                         "down-weighted by staleness")
+    ap.add_argument("--staleness-decay", type=float, default=1.0,
+                    help="async staleness decay: an update dispatched s "
+                         "server applies ago merges with weight decay**s "
+                         "(1.0 = no down-weighting)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="async: drop updates staler than this many server "
+                         "applies (default: keep all)")
     ap.add_argument("--sim-ms-per-sample", type=float, default=1.0,
                     help="simulated client compute per sample at capability "
                          "1.0 (the walltime model's compute unit)")
@@ -205,8 +219,28 @@ def main(argv=None):
                      smoke=args.smoke or not args.arch.startswith("paper-"))
     if args.num_clients is not None:
         cfg = cfg.with_updates(num_clients=args.num_clients)
-    model = build_model(cfg)
     M = cfg.num_clients
+    # fail fast on client-axis divisibility BEFORE paying for model build /
+    # data synthesis (shard_round_fn would raise the same constraint later)
+    if args.client_chunk is not None and M % args.client_chunk != 0:
+        raise SystemExit(
+            f"--client-chunk {args.client_chunk} must divide the client "
+            f"count: {M} % {args.client_chunk} != 0 (pick a chunk that "
+            f"divides num-clients, or adjust --num-clients)")
+    if args.mesh:
+        sizes = parse_mesh_spec(args.mesh)
+        shards = sizes.get("pod", 1) * sizes.get("data", 1)
+        if shards > 1 and M % shards != 0:
+            raise SystemExit(
+                f"--mesh {args.mesh!r} shards the client axis {shards} "
+                f"ways, which must divide the client count: {M} % {shards} "
+                f"!= 0 (adjust --num-clients or the data/pod axis sizes)")
+    if args.async_mode and (args.mesh or args.client_chunk is not None):
+        raise SystemExit(
+            "--async is incompatible with --mesh/--client-chunk: the event "
+            "engine dispatches host-driven cohorts, not one sharded round "
+            "program")
+    model = build_model(cfg)
     is_classifier = cfg.family in ("mlp", "resnet")
 
     opt_name = args.optimizer or ("sgd" if is_classifier else "adamw")
@@ -293,13 +327,19 @@ def main(argv=None):
                        topology=topo,
                        time_per_sample_s=args.sim_ms_per_sample * 1e-3,
                        mesh=mesh,
-                       client_chunk=args.client_chunk)
+                       client_chunk=args.client_chunk,
+                       async_mode=args.async_mode,
+                       staleness_decay=args.staleness_decay,
+                       max_staleness=args.max_staleness)
     state, history = train(model, opt, batches, tcfg, M, component_lr=clr)
     print(f"final loss: {history[-1]['loss']:.4f}")
-    if topo is not None and history:
-        print(f"simulated wall-clock ({topo.name}, {topo.num_servers} "
-              f"server(s)): {history[-1]['sim_time']:.2f}s over "
-              f"{history[-1]['round']} rounds")
+    if history and (topo is not None or args.async_mode):
+        t = topo.name if topo is not None else "star"
+        unit = "applies" if args.async_mode else "rounds"
+        print(f"simulated wall-clock ({t}"
+              + (", async" if args.async_mode else "")
+              + f"): {history[-1]['sim_time']:.2f}s over "
+              f"{history[-1]['round']} {unit}")
     return state, history
 
 

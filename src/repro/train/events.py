@@ -1,0 +1,442 @@
+"""Event-queue execution engine: staleness-aware asynchronous rounds.
+
+The synchronous loop (train/loop.py) advances in ROUNDS — every client
+waits at a barrier for the slowest cohort member before the server applies
+anything. That is exactly the failure mode the paper's edge setting makes
+expensive: one straggling device stalls the whole fleet. This engine
+replaces the barrier with a simulated event queue built on the phase
+contract (core/phases.py) and the topology clock (core/topology.py):
+
+  dispatch   a COHORT of clients picks up the current server state and
+             runs the algorithm's `local` phase jointly on one round batch
+             (server-coupled algorithms — splitfed/smofi/parallelsfl/mtsl
+             — interact with the shared server every local step, so the
+             cohort's local phase is one joint computation, not M
+             independent ones). Each member's finish time is its own:
+             compute seconds from its capability (client_compute_seconds)
+             plus the transfer seconds of its own uplink/downlink events
+             (client_transfer_seconds). Fast members of a slow cohort
+             arrive early.
+  arrival    members arriving at the same instant form one apply event.
+             The server applies the cohort's payload restricted to the
+             arrivals via the `apply` phase, then mixes the result into
+             the live state FedAsync-style [Xie et al., 2019]:
+
+                 state <- state + w * (applied - state)
+
+             with per-client weights w = staleness_weights(s, decay)
+             riding the apply-time schedule (`ClientSchedule.staleness`),
+             where s counts the server applies that landed since this
+             cohort dispatched. Updates staler than `max_staleness` are
+             dropped. Shared payload components (the jointly-trained
+             server, fused momentum, mixture components) commit at the
+             cohort's FIRST arrival only; per-client rows commit as their
+             owners arrive. Which leaves are rows comes from the
+             algorithm's `client_axes` declaration — the same marks the
+             mesh sharding uses.
+  redispatch arrivals immediately pick up the freshest state as a new
+             cohort. Fast clients therefore cycle many times while a
+             straggler's old cohort is still in flight — stragglers never
+             stall the fleet (benchmarks/async_rounds.py measures this).
+
+Synchronous degeneration (pinned in tests/test_async_events.py): under
+uniform capability, ideal links and a full cohort, every member arrives at
+the same instant, so each apply event is a whole-cohort first arrival with
+staleness 0 and takes the UNWEIGHTED legacy path — `apply(state,
+local(state, batch, sched), sched)`, bit-for-bit the synchronous
+`round_fn`. The event engine run then equals the barrier loop exactly.
+
+Multi-server topologies get honest per-replica server states: each replica
+runs its own cohort cycle over the clients attached to it, and replicas
+merge periodically (every `topo.sync_every` completed rounds on every
+replica) — shared leaves average, per-client rows owner-gather, and
+fedavg-family states (replica_avg_all) average everything. This replaces
+the fully-synced approximation the synchronous loop bills.
+
+`EventEngine.snapshot()` serializes the whole clock — sim time, counters,
+and every in-flight cohort (payload, schedule, pending arrival times) —
+through train/checkpoint.py's msgpack packer, so an async run resumes
+bit-identically mid-flight (`train(init_state=..., init_events=...)`).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topology_mod
+from repro.core.algorithms import Algorithm, HParams, phase_program
+from repro.core.schedule import ClientSchedule, staleness_weights
+
+PyTree = Any
+
+
+class _Cohort:
+    """One in-flight dispatched cohort: its joint local-phase payload, the
+    dispatch-time schedule, and arrival bookkeeping."""
+
+    __slots__ = ("cid", "members", "replica", "version", "sched", "payload",
+                 "applied_any", "pending")
+
+    def __init__(self, cid, members, replica, version, sched, payload,
+                 applied_any=False, pending=None):
+        self.cid = cid
+        self.members = tuple(int(m) for m in members)
+        self.replica = int(replica)
+        self.version = int(version)  # engine apply count at dispatch
+        self.sched = sched
+        self.payload = payload
+        self.applied_any = bool(applied_any)
+        self.pending = len(self.members) if pending is None else int(pending)
+
+
+def _state_marks(alg: Algorithm, state: PyTree) -> PyTree:
+    """Bool tree marking [M, ...] client-axis leaves (False-tree when the
+    algorithm declares none — everything treated as shared)."""
+    if alg.client_axes is None:
+        return jax.tree.map(lambda _: False, state)
+    return alg.client_axes(state)
+
+
+def _build_merge(marks: PyTree, decay: float, max_staleness: Optional[int]):
+    """The engine's staleness mixer: state <- state + w·(applied - state).
+
+    Per-client rows use per-client weights w[m] = mask[m] · decay^s[m]
+    (non-arrived rows hold exactly); shared leaves use the event's scalar
+    weight gated by `shared_on` (1.0 only at the cohort's first arrival).
+    Integer leaves don't mix: shared ints (step counters) take the applied
+    value when shared commits, row ints (cluster maps) hold. Staleness
+    rides the apply-time schedule, so this jits once and is fed fresh
+    schedules per event."""
+
+    def merge(state, new, sched: ClientSchedule, shared_on):
+        w = staleness_weights(sched.staleness, decay, max_staleness)
+        w = w * sched.mask  # [M]: arrived participants only
+        shared_w = jnp.max(w) * shared_on
+
+        def mix(x, n, is_row):
+            if is_row:
+                if not jnp.issubdtype(x.dtype, jnp.inexact):
+                    return x
+                ww = w.reshape((w.shape[0],) + (1,) * (x.ndim - 1))
+                return x + ww.astype(x.dtype) * (n - x)
+            if not jnp.issubdtype(x.dtype, jnp.inexact):
+                return jnp.where(shared_w > 0, n, x)
+            return x + shared_w.astype(x.dtype) * (n - x)
+
+        return jax.tree.map(mix, state, new, marks)
+
+    return merge
+
+
+def sync_replicas(states: list, marks: PyTree, attach, avg_all: bool) -> list:
+    """Merge S replica states into one synced state, broadcast back to all.
+
+    avg_all (fedavg-family — every [M, ...] row is a COPY of one global
+    model): all inexact leaves average elementwise, ints take replica 0.
+    Otherwise: shared inexact leaves average, shared ints take replica 0,
+    and client-axis rows are taken from each client's OWNER replica (the
+    one it attaches to) — a replica's view of a foreign client's row is
+    stale by construction and must not pollute the owner's.
+    """
+    S = len(states)
+    if S == 1:
+        return states
+    treedef = jax.tree.structure(states[0])
+    flats = [jax.tree.leaves(s) for s in states]
+    marks_flat = jax.tree.leaves(marks)
+    own = jnp.asarray(attach, jnp.int32)
+    rows = jnp.arange(own.shape[0])
+    out = []
+    for i, is_row in enumerate(marks_flat):
+        leaves = [f[i] for f in flats]
+        if is_row and not avg_all:
+            stacked = jnp.stack(leaves)  # [S, M, ...]
+            out.append(stacked[own, rows])
+        elif jnp.issubdtype(leaves[0].dtype, jnp.inexact):
+            out.append(jnp.mean(jnp.stack(leaves), axis=0))
+        else:
+            out.append(leaves[0])
+    merged = jax.tree.unflatten(treedef, out)
+    return [merged] * S
+
+
+class EventEngine:
+    """The asynchronous executor for one algorithm on one topology.
+
+    Drive it with `run(pairs, max_dispatches)` — a generator over apply
+    events — where `pairs` yields (round_batch, ClientSchedule) in dispatch
+    order. The engine consumes one pair per cohort dispatch (so an async
+    run and a synchronous run of R rounds see exactly the same R batches
+    and schedule draws) and keeps yielding until every in-flight cohort
+    has drained.
+    """
+
+    def __init__(self, alg: Algorithm, model, num_clients: int, hp: HParams,
+                 topo, *, staleness_decay: float = 1.0,
+                 max_staleness: Optional[int] = None,
+                 time_per_sample_s: float = 1e-3,
+                 init_state: PyTree = None, snapshot: Optional[dict] = None):
+        from repro.core import comm_cost
+
+        self.alg = alg
+        self.model = model
+        self.M = int(num_clients)
+        self.hp = hp
+        self.topo = topo
+        self.decay = float(staleness_decay)
+        self.max_staleness = (None if max_staleness is None
+                              else int(max_staleness))
+        self.tps = float(time_per_sample_s)
+        self.spr = alg.steps_per_round(hp)
+        self.cfg = model.cfg
+        self.tower_params, self.total_params = comm_cost.model_param_counts(
+            model)
+
+        prog = phase_program(alg, model, num_clients, hp)
+        self._local = jax.jit(prog.local)
+        self._apply = jax.jit(prog.apply)
+
+        self.S = topo.num_servers
+        self.attach = tuple(topo.attach) if topo.attach else (0,) * self.M
+        self.groups = [
+            tuple(m for m in range(self.M) if self.attach[m] == r)
+            for r in range(self.S)]
+        self.sync_every = max(int(getattr(topo, "sync_every", 1)), 1)
+
+        self.marks = _state_marks(alg, init_state)
+        self._merge = jax.jit(_build_merge(self.marks, self.decay,
+                                           self.max_staleness))
+
+        self.replicas = [init_state] * self.S
+        self.heap: list = []
+        self.cohorts: dict[int, _Cohort] = {}
+        self.t = 0.0
+        self.applies = 0
+        self.dispatches = 0
+        self.dropped = 0
+        self.next_seq = 0
+        self.next_cid = 0
+        self.rounds_done = [0] * self.S
+        self.next_sync_at = self.sync_every
+        if snapshot is not None:
+            self._restore(snapshot)
+
+    # -- persistence --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """The whole engine clock as a checkpointable tree (msgpack-safe:
+        lists only, no int-keyed dicts): counters plus every in-flight
+        cohort's payload, schedule, and pending per-member arrival times."""
+        pend: dict[int, list] = {c: [] for c in self.cohorts}
+        for (t, seq, cid, m) in self.heap:
+            pend[cid].append([float(t), int(seq), int(m)])
+        snap = {
+            "sim_time": float(self.t),
+            "applies": int(self.applies),
+            "dispatches": int(self.dispatches),
+            "dropped": int(self.dropped),
+            "next_seq": int(self.next_seq),
+            "next_cid": int(self.next_cid),
+            "rounds_done": [int(x) for x in self.rounds_done],
+            "next_sync_at": int(self.next_sync_at),
+            "cohorts": [
+                {
+                    "cid": int(c.cid),
+                    "members": [int(m) for m in c.members],
+                    "replica": int(c.replica),
+                    "version": int(c.version),
+                    "applied_any": bool(c.applied_any),
+                    "pending": sorted(pend[c.cid]),
+                    "sched": c.sched,
+                    "payload": c.payload,
+                }
+                for c in self.cohorts.values()
+            ],
+        }
+        if self.S > 1:
+            snap["replicas"] = [self.alg.state_to_tree(s)
+                                for s in self.replicas]
+        return snap
+
+    def _restore(self, snap: dict) -> None:
+        self.t = float(snap["sim_time"])
+        self.applies = int(snap["applies"])
+        self.dispatches = int(snap["dispatches"])
+        self.dropped = int(snap.get("dropped", 0))
+        self.next_seq = int(snap["next_seq"])
+        self.next_cid = int(snap["next_cid"])
+        self.rounds_done = [int(x) for x in snap["rounds_done"]]
+        self.next_sync_at = int(snap["next_sync_at"])
+        if "replicas" in snap:
+            self.replicas = [self.alg.state_from_tree(t)
+                             for t in snap["replicas"]]
+        for ce in snap["cohorts"]:
+            c = _Cohort(ce["cid"], ce["members"], ce["replica"],
+                        ce["version"], ce["sched"], ce["payload"],
+                        applied_any=ce["applied_any"],
+                        pending=len(ce["pending"]))
+            self.cohorts[c.cid] = c
+            for t, seq, m in ce["pending"]:
+                heapq.heappush(self.heap, (float(t), int(seq), c.cid, int(m)))
+
+    # -- the clock ----------------------------------------------------------
+
+    def _member_times(self, sched: ClientSchedule, width: int) -> np.ndarray:
+        """[M] seconds from dispatch to arrival: capability compute + the
+        client's own link transfers (NOT the cohort max — that is the
+        synchronous barrier this engine removes)."""
+        sizes = None if sched.sizes is None else np.asarray(sched.sizes)
+        compute = topology_mod.client_compute_seconds(
+            self.topo, local_steps=self.spr, samples_per_step=width,
+            time_per_sample_s=self.tps, budget=np.asarray(sched.budget),
+            sizes=sizes)
+        transfer = np.zeros(self.M, np.float64)
+        if self.alg.round_events is not None:
+            mask = np.asarray(sched.mask, np.float64)
+            # bill the ACTUAL cohort participants: explicit sizes map each
+            # event to its real client (comm_cost falls back to "the first
+            # P clients" otherwise)
+            ev_sizes = (sizes if sizes is not None
+                        else ((mask > 0) * max(width, 1)).astype(np.int64))
+            events = self.alg.round_events(
+                self.topo, self.cfg, self.M, width, self.hp,
+                tower_params=self.tower_params,
+                total_params=self.total_params,
+                num_participants=int((mask > 0).sum()), sizes=ev_sizes,
+                sync_round=False)
+            transfer = topology_mod.client_transfer_seconds(self.topo, events)
+        return compute + transfer
+
+    # -- dispatch / apply ----------------------------------------------------
+
+    def _dispatch(self, members, replica: int, t: float, pairs) -> bool:
+        if self.dispatches >= self.total:
+            return False
+        try:
+            batch, sched = next(pairs)
+        except StopIteration:
+            self.total = self.dispatches
+            return False
+        width = jax.tree.leaves(batch)[0].shape[1] // self.spr
+        if len(members) < self.M:
+            mmask = np.zeros(self.M, np.float32)
+            mmask[list(members)] = 1.0
+            sched = sched._replace(mask=sched.mask * jnp.asarray(mmask))
+        payload = self._local(self.replicas[replica], batch, sched)
+        times = self._member_times(sched, width)
+        c = _Cohort(self.next_cid, members, replica, self.applies, sched,
+                    payload)
+        self.next_cid += 1
+        self.cohorts[c.cid] = c
+        for m in c.members:
+            heapq.heappush(self.heap,
+                           (t + float(times[m]), self.next_seq, c.cid, m))
+            self.next_seq += 1
+        self.dispatches += 1
+        return True
+
+    def _pop_event(self):
+        """Next apply event: all same-cohort entries at the exactly-equal
+        earliest time (under uniform capability + ideal links the whole
+        cohort lands in one event — the synchronous degeneration)."""
+        t, seq, cid, m = heapq.heappop(self.heap)
+        group = [m]
+        while (self.heap and self.heap[0][0] == t
+               and self.heap[0][2] == cid):
+            group.append(heapq.heappop(self.heap)[3])
+        return t, cid, group
+
+    def _maybe_sync(self) -> bool:
+        if self.S <= 1:
+            return False
+        synced = False
+        while min(self.rounds_done) >= self.next_sync_at:
+            self.replicas = sync_replicas(
+                self.replicas, self.marks, self.attach,
+                self.alg.replica_avg_all)
+            self.next_sync_at += self.sync_every
+            synced = True
+        return synced
+
+    def state(self) -> PyTree:
+        """The engine's servable/evaluable state: the (synced view of the)
+        replica states."""
+        if self.S == 1:
+            return self.replicas[0]
+        return sync_replicas(self.replicas, self.marks, self.attach,
+                             self.alg.replica_avg_all)[0]
+
+    def run(self, pairs, max_dispatches: int) -> Iterator[dict]:
+        """Generator over apply events.
+
+        Dispatches up to `max_dispatches` cohorts total (each consuming one
+        (batch, schedule) pair), then drains in-flight arrivals. Yields one
+        record per arrival event: sim_time, applies/dispatches counters,
+        the apply metrics (None for staleness-dropped or participant-free
+        events), arrived participant count, the event's staleness, and
+        whether the cohort fully completed.
+        """
+        self.total = int(max_dispatches)
+        if not self.heap and not self.cohorts:
+            for r in range(self.S):
+                if self.groups[r]:
+                    self._dispatch(self.groups[r], r, self.t, pairs)
+        while self.heap:
+            t, cid, group = self._pop_event()
+            c = self.cohorts[cid]
+            self.t = t
+            c.pending -= len(group)
+            s = self.applies - c.version
+            first = not c.applied_any
+            state = self.replicas[c.replica]
+            mask_np = np.asarray(c.sched.mask)
+            gmask = np.zeros(self.M, np.float32)
+            gmask[group] = 1.0
+            participants = int((mask_np * gmask).sum())
+            metrics = None
+            dropped = False
+            if participants == 0:
+                pass  # only masked-out members arrived: nothing to apply
+            elif (self.max_staleness is not None
+                  and s > self.max_staleness):
+                dropped = True
+                self.dropped += 1
+            elif first and len(group) == len(c.members) and s == 0:
+                # the synchronous degeneration: whole cohort, fresh —
+                # bit-for-bit the legacy round apply
+                state, metrics = self._apply(state, c.payload, c.sched)
+                self.replicas[c.replica] = state
+                c.applied_any = True
+                self.applies += 1
+            else:
+                asched = c.sched._replace(
+                    mask=c.sched.mask * jnp.asarray(gmask),
+                    staleness=jnp.full((self.M,), s, jnp.int32))
+                new, metrics = self._apply(state, c.payload, asched)
+                self.replicas[c.replica] = self._merge(
+                    state, new, asched, jnp.float32(1.0 if first else 0.0))
+                c.applied_any = True
+                self.applies += 1
+            done = c.pending == 0
+            if done:
+                del self.cohorts[cid]
+                self.rounds_done[c.replica] += 1
+                self._maybe_sync()
+            # re-dispatch BEFORE yielding so a snapshot() taken at the
+            # yield point captures a consistent clock (arrivals are
+            # already back in flight)
+            self._dispatch(tuple(group), c.replica, t, pairs)
+            yield {
+                "sim_time": self.t,
+                "applies": self.applies,
+                "dispatches": self.dispatches,
+                "metrics": metrics,
+                "participants": participants,
+                "staleness": s,
+                "dropped": dropped,
+                "cohort_done": done,
+            }

@@ -92,11 +92,12 @@ from repro.core.schedule import (
     full_schedule,
     schedule_stream,
 )
-from repro.core.topology import Topology
+from repro.core.topology import Topology, star
 from repro.models.registry import Model
 from repro.optim.optimizers import Optimizer
 from repro.optim.per_component import ComponentLR
 from repro.train.checkpoint import save_algorithm_state
+from repro.train.events import EventEngine
 from repro.train.pipeline import MetricsRing, pipeline_rounds
 
 
@@ -152,6 +153,18 @@ class TrainConfig:
     # Must divide num_clients (and be a multiple of the mesh's client-shard
     # count when both are set). None = plain vmap.
     client_chunk: Optional[int] = None
+    # event-driven asynchronous execution (train/events.py): replace the
+    # synchronous round barrier with the staleness-aware event-queue
+    # engine. Each dispatch still consumes one round batch + one schedule
+    # draw, so `steps` bounds the same total work; history entries are
+    # keyed by server APPLY events instead of rounds. Incompatible with
+    # mesh/client_chunk (the engine is host-driven per cohort).
+    async_mode: bool = False
+    # FedAsync staleness decay: an update dispatched s applies ago merges
+    # with weight decay**s. 1.0 = no down-weighting.
+    staleness_decay: float = 1.0
+    # drop updates staler than this many applies (None = keep all)
+    max_staleness: Optional[int] = None
 
 
 def train(
@@ -165,6 +178,7 @@ def train(
     log: Callable[[str], None] = print,
     init_state=None,
     start_round: int = 0,
+    init_events: Optional[dict] = None,
 ):
     """Returns (final_state, history list of metric dicts).
 
@@ -199,6 +213,15 @@ def train(
     rng = jax.random.PRNGKey(tcfg.seed)
     state = (alg.init_state(model, rng, num_clients, hp)
              if init_state is None else init_state)
+    if tcfg.async_mode:
+        if tcfg.mesh is not None or tcfg.client_chunk is not None:
+            raise ValueError(
+                "async_mode is incompatible with mesh/client_chunk: the "
+                "event engine dispatches host-driven cohorts, not a single "
+                "sharded round program")
+        return _train_async(model, tcfg, num_clients, alg, hp, scfg, cap,
+                            spr, rounds, state, batches, eval_batches, log,
+                            init_events)
     if tcfg.mesh is not None:
         # split the client axis of the state over the mesh up front so the
         # first round starts from device-resident shards
@@ -246,10 +269,9 @@ def train(
             topo = topo.with_capability(cap)
         tower_p, total_p = comm_cost.model_param_counts(model)
 
-        def round_sim_s(r, batch, sched):
-            # per-step row width as generated (padded under capability
+        def round_sim_s(r, b, sched):
+            # b: per-step row width as generated (padded under capability
             # batching; sizes then carry the true per-client sample counts)
-            b = jax.tree.leaves(batch)[0].shape[1] // spr
             return simulate_round_walltime(
                 alg, topo, model.cfg, num_clients, b, hp, sched,
                 tower_params=tower_p, total_params=total_p,
@@ -286,10 +308,14 @@ def train(
             pipeline_rounds(batches, sched_iter, depth=tcfg.prefetch,
                             num_rounds=remaining, device=stage_sharding)):
         r = start_round + i + 1  # absolute 1-based round index
+        # read the batch's static width BEFORE dispatch: the sharded round
+        # program donates the staged batch buffers on non-CPU backends
+        b = (jax.tree.leaves(batch)[0].shape[1] // spr
+             if round_sim_s is not None else None)
         state, metrics = round_fn(state, batch, sched)
         rounds_done = r
         if round_sim_s is not None:
-            sim_time += round_sim_s(r, batch, sched)
+            sim_time += round_sim_s(r, b, sched)
         # log_every=0 disables the periodic cadence (first/last still log),
         # mirroring eval_every=0 — and never divides by zero. The
         # unconditional first-round log belongs to FRESH runs only: a
@@ -324,3 +350,102 @@ def train(
                              extra={"step": rounds_done * spr,
                                     "round": rounds_done})
     return state, history
+
+
+def _train_async(model, tcfg, num_clients, alg, hp, scfg, cap, spr, rounds,
+                 state, batches, eval_batches, log, init_events):
+    """The event-driven branch of train(): drives the EventEngine
+    (train/events.py) instead of the barrier loop.
+
+    One cohort dispatch consumes one round batch + one schedule draw, so
+    `TrainConfig.steps` bounds the same total work as the synchronous
+    path; history/eval/checkpoint cadences are counted in server APPLY
+    events ("round" in history = apply index). Checkpoints carry the
+    engine clock under extra["events"]; resume by passing the restored
+    state as `init_state=` and that snapshot as `init_events=` together
+    with the batch stream positioned at snapshot["dispatches"] rounds in.
+    """
+    topo = tcfg.topology if tcfg.topology is not None else star(num_clients)
+    if topo.capability is None:
+        topo = topo.with_capability(cap)
+    engine = EventEngine(alg, model, num_clients, hp, topo,
+                         staleness_decay=tcfg.staleness_decay,
+                         max_staleness=tcfg.max_staleness,
+                         time_per_sample_s=tcfg.time_per_sample_s,
+                         init_state=state, snapshot=init_events)
+    start_disp = engine.dispatches
+    if scfg.is_trivial:
+        sched_iter = itertools.repeat(full_schedule(num_clients, spr))
+    else:
+        sched_iter = schedule_stream(scfg, num_clients, spr,
+                                     tcfg.batch_per_client, start_disp)
+    eval_fn = (jax.jit(alg.eval_fn(model, num_clients))
+               if eval_batches else None)
+    eval_iter = itertools.cycle(eval_batches) if eval_fn is not None else None
+    if eval_iter is not None and engine.applies and tcfg.eval_every:
+        # resume: skip the evals the interrupted run already consumed
+        for _ in range(engine.applies // tcfg.eval_every):
+            next(eval_iter)
+    # the same host-side prefetch pipeline as the sync path stages batches
+    # and schedule draws ahead of the engine's dispatch demand
+    pairs = pipeline_rounds(batches, sched_iter, depth=tcfg.prefetch,
+                            num_rounds=max(rounds - start_disp, 0))
+
+    history = []
+    t0 = time.time()
+    ckpt_applies = engine.applies
+    last_ev = None
+
+    def _entry(ev):
+        e = {"step": ev["applies"] * spr, "round": ev["applies"],
+             "loss": float(ev["metrics"]["loss"]),
+             "time": time.time() - t0,
+             "participants": ev["participants"],
+             "sim_time": ev["sim_time"], "staleness": ev["staleness"]}
+        return e
+
+    def _log(e):
+        log(f"apply {e['round']:>6d}  loss {e['loss']:.4f}"
+            + (f"  acc_mtl {e['acc_mtl']:.3f}" if "acc_mtl" in e else "")
+            + f"  (sim {e['sim_time']:.3f}s, stale {e['staleness']})")
+
+    for ev in engine.run(pairs, max_dispatches=rounds):
+        if ev["metrics"] is None:
+            continue  # staleness-dropped or participant-free arrival
+        last_ev = ev
+        a_i = ev["applies"]
+        do_log = bool(tcfg.log_every and a_i % tcfg.log_every == 0)
+        do_eval = bool(eval_fn is not None and tcfg.eval_every
+                       and a_i % tcfg.eval_every == 0)
+        if do_log or do_eval:
+            e = _entry(ev)
+            if do_eval:
+                e["acc_mtl"] = float(eval_fn(engine.state(), next(eval_iter))
+                                     .get("acc_mtl", float("nan")))
+            history.append(e)
+            if do_log:
+                _log(e)
+        if (tcfg.checkpoint_path and tcfg.checkpoint_every
+                and a_i % tcfg.checkpoint_every == 0):
+            save_algorithm_state(
+                tcfg.checkpoint_path, alg, engine.state(),
+                extra={"step": a_i * spr, "round": a_i,
+                       "events": engine.snapshot()})
+            ckpt_applies = a_i
+    final_state = engine.state()
+    if last_ev is not None and (not history
+                                or history[-1]["round"] != last_ev["applies"]):
+        # mirror the sync loop: the run's last applied event always lands
+        # in history (with a final eval when eval is configured)
+        e = _entry(last_ev)
+        if eval_fn is not None:
+            e["acc_mtl"] = float(eval_fn(final_state, next(eval_iter))
+                                 .get("acc_mtl", float("nan")))
+        history.append(e)
+        _log(e)
+    if tcfg.checkpoint_path and engine.applies > ckpt_applies:
+        save_algorithm_state(
+            tcfg.checkpoint_path, alg, final_state,
+            extra={"step": engine.applies * spr, "round": engine.applies,
+                   "events": engine.snapshot()})
+    return final_state, history

@@ -36,6 +36,11 @@ tests/test_pipeline.py):
 Opting out: `TrainConfig.prefetch = 0` (or `--prefetch 0` on the
 launcher) runs the loop fully synchronously. See train/loop.py for how
 the loop wires these together.
+
+The event-driven async engine (train/events.py, `--async`) consumes the
+same `pipeline_rounds` stream: one cohort DISPATCH pulls one
+(batch, schedule) pair, so the background thread keeps generation ahead
+of the engine's dispatch demand exactly as it does for barrier rounds.
 """
 from __future__ import annotations
 

@@ -1,0 +1,412 @@
+"""Event-driven async rounds (core/phases.py + train/events.py).
+
+  * Phase contract: every registered algorithm's `phases` program composes
+    (compose_phases) to a round_fn whose trajectory is BIT-FOR-BIT the
+    legacy `round_fn` — the synchronous path is the composition, so the
+    seeded goldens in test_algorithms.py keep pinning it.
+  * Synchronous degeneration: under uniform capability, ideal links, full
+    cohorts and no staleness decay, the event engine's trajectory equals
+    the synchronous barrier loop exactly, for all seven algorithms.
+  * Asynchrony semantics: heterogeneous capability produces genuinely
+    stale arrivals; staleness decay down-weights them; `max_staleness`
+    drops them; two identically seeded runs are bit-identical.
+  * Resume: a mid-flight `EventEngine.snapshot()` round-trips through
+    save_algorithm_state/load_algorithm_state and resumes bit-identically
+    to the uninterrupted run — in-flight cohorts, payloads and arrival
+    times included.
+  * Multi-server: per-replica server states with periodic sync stay finite
+    and deterministic.
+  * Sharding satellites: divisibility errors name M and the shard count;
+    the sharded round donates state+batch buffers off-CPU only.
+"""
+import itertools
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import make_source
+from repro.configs import get_config
+from repro.core import topology as T
+from repro.core.algorithms import (
+    HParams,
+    get_algorithm,
+    list_algorithms,
+    phase_program,
+    shard_round_fn,
+)
+from repro.core.phases import compose_phases
+from repro.core.schedule import full_schedule
+from repro.data.pipeline import client_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.checkpoint import load_algorithm_state, save_algorithm_state
+from repro.train.events import EventEngine
+from repro.train.loop import TrainConfig, train
+
+ALL_ALGS = sorted(list_algorithms())
+HP = dict(lr=0.1, local_steps=2)
+
+
+def _setup():
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    src = make_source(cfg, alpha=0.0, seed=0)
+    return cfg, model, src
+
+
+def _rounds(src, spr, n, seed=0):
+    return list(itertools.islice(
+        iter(client_batches(src, 4 * spr, steps=n, seed=seed)), n))
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+def _het_topo(M):
+    caps = np.ones(M)
+    caps[0] = 0.2
+    return T.star(M).with_capability(caps)
+
+
+# ---------------------------------------------------------------------------
+# phase contract
+
+
+@pytest.mark.parametrize("alg_name", ALL_ALGS)
+def test_phase_composition_is_the_round_fn(alg_name):
+    """compose_phases(alg.phases) == alg.round_fn, bit for bit, over a
+    multi-round trajectory — the tentpole refactor invariant."""
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm(alg_name)
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    batches = _rounds(src, spr, 3)
+    sched = full_schedule(M, spr)
+    state_l = state_p = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    legacy = jax.jit(a.round_fn(model, M, hp))
+    composed = jax.jit(compose_phases(phase_program(a, model, M, hp)))
+    for b in batches:
+        state_l, m_l = legacy(state_l, b, sched)
+        state_p, m_p = composed(state_p, b, sched)
+    _assert_trees_equal(a.state_to_tree(state_l), a.state_to_tree(state_p))
+    _assert_trees_equal(m_l, m_p)
+
+
+def test_phase_program_requires_declaration():
+    from repro.core.algorithms import Algorithm
+    a = get_algorithm("mtsl")
+    bare = Algorithm(name="bare", init_state=a.init_state,
+                     round_fn=a.round_fn, eval_fn=a.eval_fn,
+                     state_to_tree=a.state_to_tree,
+                     state_from_tree=a.state_from_tree,
+                     round_bytes=a.round_bytes)
+    with pytest.raises(ValueError, match="phases"):
+        phase_program(bare, None, 4, HParams())
+
+
+# ---------------------------------------------------------------------------
+# synchronous degeneration
+
+
+@pytest.mark.parametrize("alg_name", ALL_ALGS)
+def test_async_equals_sync_under_uniform_ideal(alg_name):
+    """Uniform capability + ideal links + full cohorts + decay 1.0: the
+    event engine's final state is BIT-FOR-BIT the synchronous loop's."""
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm(alg_name)
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    R = 3
+    batches = _rounds(src, spr, R)
+    scheds = [full_schedule(M, spr) for _ in range(R)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+
+    legacy = jax.jit(a.round_fn(model, M, hp))
+    s_sync = state0
+    for r in range(R):
+        s_sync, _ = legacy(s_sync, batches[r], scheds[r])
+
+    eng = EventEngine(a, model, M, hp, T.star(M), init_state=state0)
+    events = list(eng.run(iter(list(zip(batches, scheds))),
+                          max_dispatches=R))
+    assert eng.applies == R  # every cohort landed as ONE whole-group event
+    assert all(ev["staleness"] == 0 for ev in events)
+    _assert_trees_equal(a.state_to_tree(s_sync),
+                        a.state_to_tree(eng.state()))
+
+
+def test_train_async_mode_matches_sync_train():
+    """The same degeneration through the public train() entrypoint."""
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm("mtsl")
+    spr = a.steps_per_round(HParams(**HP))
+
+    def mk():
+        return client_batches(src, 4 * spr, steps=4, seed=0)
+
+    s_sync, _ = train(model, sgd(0.1), mk(),
+                      TrainConfig(steps=4 * spr, algorithm="mtsl", lr=0.1,
+                                  local_steps=2, log_every=0, seed=0),
+                      M, log=lambda s: None)
+    s_async, hist = train(model, sgd(0.1), mk(),
+                          TrainConfig(steps=4 * spr, algorithm="mtsl",
+                                      lr=0.1, local_steps=2, log_every=0,
+                                      seed=0, async_mode=True),
+                          M, log=lambda s: None)
+    _assert_trees_equal(a.state_to_tree(s_sync), a.state_to_tree(s_async))
+    assert hist and hist[-1]["round"] == 4
+    assert hist[-1]["sim_time"] > 0.0
+
+
+def test_async_mode_rejects_mesh_and_chunk():
+    cfg, model, src = _setup()
+    with pytest.raises(ValueError, match="async_mode"):
+        train(model, sgd(0.1), iter([]),
+              TrainConfig(steps=2, algorithm="mtsl", async_mode=True,
+                          client_chunk=2),
+              cfg.num_clients, log=lambda s: None)
+
+
+# ---------------------------------------------------------------------------
+# genuine asynchrony
+
+
+def _run_engine(a, model, M, hp, topo, batches, scheds, state0, **kw):
+    eng = EventEngine(a, model, M, hp, topo, init_state=state0, **kw)
+    events = list(eng.run(iter(list(zip(batches, scheds))),
+                          max_dispatches=len(batches)))
+    return eng, events
+
+
+def test_heterogeneous_capability_produces_staleness():
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm("mtsl")
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    R = 8
+    batches = _rounds(src, spr, R)
+    scheds = [full_schedule(M, spr) for _ in range(R)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    eng, events = _run_engine(a, model, M, hp, _het_topo(M), batches,
+                              scheds, state0, staleness_decay=0.6)
+    # the straggler's cohorts land AFTER fast clients cycled: staleness > 0
+    assert max(ev["staleness"] for ev in events) > 0
+    # fast members of a split cohort arrive separately from the straggler
+    assert any(ev["participants"] < M for ev in events if ev["metrics"])
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree.leaves(a.state_to_tree(eng.state())))
+
+
+def test_async_runs_are_deterministic():
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm("splitfed")
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    batches = _rounds(src, spr, 6)
+    scheds = [full_schedule(M, spr) for _ in range(6)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    e1, ev1 = _run_engine(a, model, M, hp, _het_topo(M), batches, scheds,
+                          state0, staleness_decay=0.6)
+    e2, ev2 = _run_engine(a, model, M, hp, _het_topo(M), batches, scheds,
+                          state0, staleness_decay=0.6)
+    assert [x["staleness"] for x in ev1] == [x["staleness"] for x in ev2]
+    assert [x["sim_time"] for x in ev1] == [x["sim_time"] for x in ev2]
+    _assert_trees_equal(a.state_to_tree(e1.state()),
+                        a.state_to_tree(e2.state()))
+
+
+def test_staleness_decay_changes_the_trajectory():
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm("mtsl")
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    batches = _rounds(src, spr, 8)
+    scheds = [full_schedule(M, spr) for _ in range(8)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    e_full, _ = _run_engine(a, model, M, hp, _het_topo(M), batches, scheds,
+                            state0, staleness_decay=1.0)
+    e_decay, _ = _run_engine(a, model, M, hp, _het_topo(M), batches, scheds,
+                             state0, staleness_decay=0.3)
+    leaves_a = jax.tree.leaves(a.state_to_tree(e_full.state()))
+    leaves_b = jax.tree.leaves(a.state_to_tree(e_decay.state()))
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(leaves_a, leaves_b))
+
+
+def test_max_staleness_drops_stale_updates():
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm("mtsl")
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    batches = _rounds(src, spr, 8)
+    scheds = [full_schedule(M, spr) for _ in range(8)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    eng, events = _run_engine(a, model, M, hp, _het_topo(M), batches,
+                              scheds, state0, max_staleness=0)
+    assert eng.dropped > 0
+    assert all(ev["metrics"] is None for ev in events if ev["dropped"])
+    # dropped events never advance the apply counter
+    assert eng.applies == sum(1 for ev in events if ev["metrics"] is not None)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume carries the engine clock
+
+
+@pytest.mark.parametrize("alg_name", ["mtsl", "splitfed"])
+def test_snapshot_resume_is_bitwise(alg_name, tmp_path):
+    """Interrupt mid-flight (cohorts in the air), round-trip the snapshot
+    through the msgpack checkpoint, resume: final state, sim clock, and
+    counters all equal the uninterrupted run's."""
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm(alg_name)
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    R = 8
+    batches = _rounds(src, spr, R)
+    scheds = [full_schedule(M, spr) for _ in range(R)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    topo = _het_topo(M)
+
+    eng = EventEngine(a, model, M, hp, topo, staleness_decay=0.6,
+                      init_state=state0)
+    gen = eng.run(iter(list(zip(batches, scheds))), max_dispatches=R)
+    for i, _ in enumerate(gen):
+        if i == 3:  # stop mid-flight: cohorts still in the air
+            break
+    assert eng.cohorts
+    path = str(tmp_path / "async.msgpack")
+    save_algorithm_state(path, a, eng.state(),
+                         extra={"events": eng.snapshot()})
+    restored, name, extra = load_algorithm_state(path)
+    assert name == alg_name
+    snap = extra["events"]
+
+    resumed = EventEngine(a, model, M, hp, topo, staleness_decay=0.6,
+                          init_state=restored, snapshot=snap)
+    rest = list(zip(batches, scheds))[snap["dispatches"]:]
+    for _ in resumed.run(iter(rest), max_dispatches=R):
+        pass
+    for _ in gen:  # finish the original, uninterrupted
+        pass
+    assert resumed.applies == eng.applies
+    assert resumed.t == eng.t
+    _assert_trees_equal(a.state_to_tree(eng.state()),
+                        a.state_to_tree(resumed.state()))
+
+
+def test_train_async_checkpoint_resume(tmp_path):
+    """train()-level plumbing: the checkpoint written by the async loop
+    carries extra['events'], and feeding it back via init_state/init_events
+    with the remaining batches reaches the uninterrupted final state."""
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm("mtsl")
+    spr = a.steps_per_round(HParams(**HP))
+    R = 4
+    ck = str(tmp_path / "ck.msgpack")
+
+    def mk(skip=0):
+        return itertools.islice(
+            iter(client_batches(src, 4 * spr, steps=R, seed=0)), skip, R)
+
+    base = dict(algorithm="mtsl", lr=0.1, local_steps=2, log_every=0,
+                seed=0, async_mode=True)
+    s_full, _ = train(model, sgd(0.1), mk(),
+                      TrainConfig(steps=R * spr, **base), M,
+                      log=lambda s: None)
+    # first half, leaving a checkpoint with the engine clock
+    train(model, sgd(0.1), mk(),
+          TrainConfig(steps=(R // 2) * spr, checkpoint_path=ck, **base), M,
+          log=lambda s: None)
+    restored, _, extra = load_algorithm_state(ck)
+    snap = extra["events"]
+    assert snap["dispatches"] == R // 2
+    s_res, _ = train(model, sgd(0.1), mk(skip=snap["dispatches"]),
+                     TrainConfig(steps=R * spr, **base), M,
+                     log=lambda s: None, init_state=restored,
+                     init_events=snap)
+    _assert_trees_equal(a.state_to_tree(s_full), a.state_to_tree(s_res))
+
+
+# ---------------------------------------------------------------------------
+# multi-server replicas
+
+
+@pytest.mark.parametrize("alg_name", ["mtsl", "fedavg"])
+def test_multi_server_replicas_sync_periodically(alg_name):
+    cfg, model, src = _setup()
+    M = cfg.num_clients
+    a = get_algorithm(alg_name)
+    hp = HParams(**HP)
+    spr = a.steps_per_round(hp)
+    R = 8
+    batches = _rounds(src, spr, R)
+    scheds = [full_schedule(M, spr) for _ in range(R)]
+    state0 = a.init_state(model, jax.random.PRNGKey(0), M, hp)
+    topo = T.multi_server(M, 2, sync_every=2).with_capability(
+        _het_topo(M).capability_array())
+    eng, events = _run_engine(a, model, M, hp, topo, batches, scheds,
+                              state0, staleness_decay=0.8)
+    assert eng.S == 2
+    assert len(eng.replicas) == 2
+    assert min(eng.rounds_done) >= 1
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree.leaves(a.state_to_tree(eng.state())))
+    # deterministic replay
+    eng2, _ = _run_engine(a, model, M, hp, topo, batches, scheds, state0,
+                          staleness_decay=0.8)
+    _assert_trees_equal(a.state_to_tree(eng.state()),
+                        a.state_to_tree(eng2.state()))
+
+
+# ---------------------------------------------------------------------------
+# sharding satellites
+
+
+def test_shard_errors_name_m_and_shard_count():
+    cfg, model, src = _setup()
+    a = get_algorithm("mtsl")
+    hp = HParams(**HP)
+    with pytest.raises(ValueError, match=r"5.*client_chunk.*2"):
+        shard_round_fn(a, model, 5, hp, client_chunk=2)
+
+
+def test_sharded_round_donates_state_and_batch_off_cpu(monkeypatch):
+    """Off-CPU the sharded round donates (state, batch); on CPU it donates
+    nothing (jax would warn and ignore it)."""
+    import repro.core.algorithms as A
+    cfg, model, src = _setup()
+    a = get_algorithm("mtsl")
+    hp = HParams(**HP)
+    recorded = {}
+    real_jit = jax.jit
+
+    def spy_jit(fn, **kw):
+        recorded.update(kw)
+        kw.pop("donate_argnums", None)
+        return real_jit(fn, **kw)
+
+    monkeypatch.setattr(A.jax, "jit", spy_jit)
+    monkeypatch.setattr(A.jax, "default_backend", lambda: "tpu")
+    shard_round_fn(a, model, cfg.num_clients, hp, client_chunk=1)
+    assert recorded.get("donate_argnums") == (0, 1)
+    recorded.clear()
+    monkeypatch.setattr(A.jax, "default_backend", lambda: "cpu")
+    shard_round_fn(a, model, cfg.num_clients, hp, client_chunk=1)
+    assert recorded.get("donate_argnums") == ()

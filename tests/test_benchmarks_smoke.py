@@ -16,7 +16,8 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks import fig5_participation, throughput, time_to_accuracy
+from benchmarks import (async_rounds, fig5_participation, throughput,
+                        time_to_accuracy)
 
 
 @pytest.mark.slow
@@ -85,3 +86,26 @@ def test_time_to_accuracy_quick_end_to_end(tmp_path):
         if c["sim_s_to_target"] is not None:
             assert 0 < c["sim_s_to_target"] <= c["total_sim_s"] + 1e-9
     assert d["claims"]["sim_clock_emitted"] is True
+
+
+@pytest.mark.slow
+def test_async_rounds_quick_end_to_end(tmp_path):
+    """The PR's acceptance-criterion artifact: under a heavy-tail
+    capability profile the event engine reaches the target accuracy in
+    less SIMULATED wall-clock than the synchronous barrier."""
+    path = tmp_path / "async.json"
+    rows = async_rounds.run(quick=True, json_path=str(path))
+    assert rows and all(len(r) == 3 for r in rows)
+    d = json.loads(path.read_text())
+    assert d["benchmark"] == "async_rounds"
+    assert set(d["arms"]) == {"sync", "async"}
+    for arm in d["arms"].values():
+        assert arm["total_sim_s"] > 0
+        assert arm["applies"] > 0
+        if arm["sim_s_to_target"] is not None:
+            assert 0 < arm["sim_s_to_target"] <= arm["total_sim_s"] + 1e-9
+    # the sim clock is deterministic, so the headline claim is exact
+    assert d["claims"]["async_beats_sync_heavy_tail"] is True
+    s = d["arms"]["sync"]["sim_s_to_target"]
+    a = d["arms"]["async"]["sim_s_to_target"]
+    assert a is not None and (s is None or a < s)
