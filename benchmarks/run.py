@@ -31,14 +31,14 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table2,table3,fig2,fig3,"
                          "fig4,fig5,ablation_split,throughput,"
-                         "time_to_accuracy,scaling,async_rounds")
+                         "time_to_accuracy,scaling,async_rounds,serving_load")
     args = ap.parse_args(argv)
 
     from benchmarks import (ablation_split_point, async_rounds,
                             fig2_lr_tuning, fig3_training_cost,
                             fig4_robustness, fig5_participation, scaling,
-                            table2_accuracy, table3_new_client, throughput,
-                            time_to_accuracy)
+                            serving_load, table2_accuracy, table3_new_client,
+                            throughput, time_to_accuracy)
     from benchmarks.common import enable_compilation_cache
 
     # persistent jit cache (JAX_COMPILATION_CACHE_DIR): the suite retraces
@@ -57,6 +57,7 @@ def main(argv=None) -> None:
         "time_to_accuracy": time_to_accuracy.run,
         "scaling": scaling.run,
         "async_rounds": async_rounds.run,
+        "serving_load": serving_load.run,
     }
     if args.only:
         keep = set(args.only.split(","))

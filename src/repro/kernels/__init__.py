@@ -2,6 +2,8 @@
 on CPU; TPU v5e is the deployment target):
 
   flash_attention/  blockwise fused attention (causal, sliding-window, GQA)
+  flash_decode/     single-query attention over a padded, kv_valid-masked
+                    KV cache (split-KV online softmax — the serving hot path)
   ssd_scan/         Mamba2 SSD chunked scan with VMEM-carried state
   mtsl_update/      fused per-component-LR update (the paper's eta * g step)
 

@@ -28,16 +28,26 @@ def attn_mask(
     kv_valid: optional [B] number of valid kv slots (decode with a partially
         filled cache).
     """
-    qpos = jnp.arange(q_len)[:, None] + q_offset  # [q,1]
+    q_off = jnp.asarray(q_offset)
+    qpos = jnp.arange(q_len)[:, None]  # [q,1]
     kpos = jnp.arange(kv_len)[None, :]  # [1,k]
-    mask = jnp.ones((q_len, kv_len), bool)
+    if q_off.ndim:  # per-row offsets (slot-based decode / chunked extend)
+        qpos = qpos[None] + q_off.reshape(-1, 1, 1)  # [B,q,1]
+        kpos = kpos[None]  # [1,1,k]
+        mask = jnp.ones((q_off.shape[0], q_len, kv_len), bool)
+    else:
+        qpos = qpos + q_off
+        mask = jnp.ones((q_len, kv_len), bool)
     if causal:
         mask &= kpos <= qpos
     if window:
         mask &= qpos - kpos < window
     if kv_valid is not None:
         kv_valid = jnp.asarray(kv_valid)
-        mask = mask[None] & (kpos[None] < kv_valid.reshape(-1, 1, 1))
+        if mask.ndim == 2:
+            mask = mask[None]
+        kpos_b = kpos if kpos.ndim == 3 else kpos[None]
+        mask = mask & (kpos_b < kv_valid.reshape(-1, 1, 1))
     return mask
 
 

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash-decode: single-query attention with a
+per-row live-cache length. Delegates to the flash-attention reference —
+the kernel's mask (kv slot j visible iff j < kv_valid[b] and, with a
+window, j > q_offset[b] - window) is exactly mha_reference's
+q_offset=/kv_valid= mask with causal=False, because for a single query
+the causal constraint IS the kv_valid bound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+def decode_reference(
+    q: jax.Array,  # [B, 1, Hq, D]
+    k: jax.Array,  # [B, cap, Hkv, D]
+    v: jax.Array,
+    *,
+    kv_valid,  # [B] or scalar: live cache rows per batch row
+    q_offset=None,  # [B] or scalar absolute query position (default kv_valid-1)
+    window: int = 0,
+) -> jax.Array:
+    B = q.shape[0]
+    kv_valid = jnp.broadcast_to(jnp.asarray(kv_valid, jnp.int32), (B,))
+    if q_offset is None:
+        q_offset = kv_valid - 1
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    return mha_reference(q, k, v, causal=False, window=window,
+                         q_offset=q_offset, kv_valid=kv_valid)

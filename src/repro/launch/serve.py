@@ -4,6 +4,9 @@ batched requests with per-client routing through the MTSL towers.
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
         --prompt-len 32 --new-tokens 16
+    # quick serving microbenchmark (prefill ms / decode tok/s / tok/s/slot):
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+        --bench --engine continuous
 """
 from __future__ import annotations
 
@@ -38,6 +41,77 @@ def _load_serve_params(path: str):
     return tree["params"]
 
 
+def run_bench(model, params, cfg, M: int, b: int, prompt_len: int,
+              new_tokens: int, engine_kind: str, chunk: int = 8) -> dict:
+    """Timed serving smoke: one warm-up pass (compile), then a measured
+    prefill phase and decode phase. Returns prefill_ms / decode_tok_s /
+    tok_s_per_slot (slots = M*b rows for both engines)."""
+    rng = jax.random.PRNGKey(0)
+    max_len = prompt_len + new_tokens
+    slots = M * b
+    prompts = np.asarray(jax.random.randint(
+        rng, (slots, prompt_len), 0, cfg.vocab_size))
+
+    if engine_kind == "continuous":
+        from repro.serve.continuous import ContinuousEngine, Request
+
+        chunk = min(chunk, prompt_len)
+        eng = ContinuousEngine(model, params, M, max_len,
+                               slots=slots, chunk=chunk)
+
+        def submit_all():
+            for i in range(slots):
+                eng.submit(Request(id=i, client=i % M, tokens=prompts[i],
+                                   new_tokens=new_tokens))
+
+        submit_all()  # warm-up: compiles extend + decode
+        eng.run()
+        submit_all()
+        eng.sync()
+        t0 = time.time()
+        n_chunks = eng.prefill_all()
+        eng.sync()
+        t1 = time.time()
+        emitted = eng.decode_all()
+        eng.sync()
+        t2 = time.time()
+        eng.run()  # drain result buffers
+        prefill_s, decode_s = t1 - t0, t2 - t1
+        decode_tokens = emitted
+        extra = {"extend_chunks": n_chunks,
+                 "decode_compiles": eng._decode_step._cache_size()}
+    else:
+        engine = ServeEngine(model, params, M, max_len)
+        inputs = {"tokens": jax.numpy.asarray(
+            prompts.reshape(M, b, prompt_len))}
+        engine.generate_sequential(inputs, new_tokens)  # warm-up
+        t0 = time.time()
+        logits, caches = engine._prefill(engine.params, inputs)
+        tok = engine._sample(logits, 0.0, None, 0).reshape(M, b, 1)
+        jax.block_until_ready(tok)
+        t1 = time.time()
+        for t in range(new_tokens - 1):
+            logits, caches = engine._decode(engine.params, caches, tok,
+                                            prompt_len + t)
+            tok = engine._sample(logits, 0.0, None, t + 1).reshape(M, b, 1)
+        jax.block_until_ready(tok)
+        t2 = time.time()
+        prefill_s, decode_s = t1 - t0, t2 - t1
+        decode_tokens = slots * (new_tokens - 1)
+        extra = {}
+
+    decode_tok_s = decode_tokens / max(decode_s, 1e-9)
+    return {
+        "engine": engine_kind,
+        "arch": cfg.name,
+        "slots": slots,
+        "prefill_ms": prefill_s * 1e3,
+        "decode_tok_s": decode_tok_s,
+        "tok_s_per_slot": decode_tok_s / slots,
+        **extra,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
@@ -47,6 +121,10 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--engine", choices=("continuous", "sequential"),
+                    default="continuous")
+    ap.add_argument("--bench", action="store_true",
+                    help="timed prefill/decode smoke instead of generation")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -61,6 +139,15 @@ def main(argv=None):
             "server": model.init_server(jax.random.fold_in(rng, 1)),
         })
 
+    if args.bench:
+        metrics = run_bench(model, params, cfg, M, b, args.prompt_len,
+                            args.new_tokens, args.engine)
+        print(f"[{metrics['engine']}] prefill {metrics['prefill_ms']:.1f} ms | "
+              f"decode {metrics['decode_tok_s']:.1f} tok/s | "
+              f"{metrics['tok_s_per_slot']:.1f} tok/s/slot "
+              f"({metrics['slots']} slots)")
+        return metrics
+
     max_len = args.prompt_len + args.new_tokens
     engine = ServeEngine(model, params, M, max_len)
     inputs = {"tokens": jax.random.randint(rng, (M, b, args.prompt_len), 0, cfg.vocab_size)}
@@ -69,9 +156,11 @@ def main(argv=None):
     if cfg.family == "encdec":
         inputs["frames"] = jax.random.normal(rng, (M, b, cfg.encoder_seq, cfg.d_model))
 
+    gen = (engine.generate if args.engine == "continuous"
+           else engine.generate_sequential)
     t0 = time.time()
-    out = engine.generate(inputs, args.new_tokens, temperature=args.temperature,
-                          rng=jax.random.fold_in(rng, 2))
+    out = gen(inputs, args.new_tokens, temperature=args.temperature,
+              rng=jax.random.fold_in(rng, 2))
     dt = time.time() - t0
     total = M * b * args.new_tokens
     print(f"generated {out.shape} tokens in {dt:.2f}s "

@@ -173,7 +173,9 @@ def attn_prefill(p, x, cfg: ModelConfig, *, window: int = 0, max_len: int = 0,
 
 def attn_decode(p, x_t, cache, pos, cfg: ModelConfig, *, window: int = 0,
                 kv_src=None):
-    """One-token decode. x_t: [B,1,d]; pos: scalar absolute position.
+    """One-token decode. x_t: [B,1,d]; pos: scalar absolute position OR a
+    per-row [B] int32 vector (slot-based continuous batching: each batch
+    row sits at its own depth in its own cache slot).
     cache: {'k','v'} [B,cap,Hkv,D]. Ring semantics when cap < needed window
     history is impossible here because cap is fixed at init; ring iff
     cap == window (long-decode variant). Returns (y, new_cache)."""
@@ -184,23 +186,67 @@ def attn_decode(p, x_t, cache, pos, cfg: ModelConfig, *, window: int = 0,
         out = mha_reference(q, k, v, causal=False)
         cdt = jnp.dtype(cfg.dtype)
         return jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt)), cache
-    pos_arr = jnp.asarray(pos)[None]
-    q, k, v = _project_qkv(p, h, h, cfg, pos_arr, pos_arr, use_rope=True)
+    B = x_t.shape[0]
+    pos_rows = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q, k, v = _project_qkv(p, h, h, cfg, pos_rows[:, None], pos_rows[:, None],
+                           use_rope=True)
     cap = cache["k"].shape[-3]
     ring = bool(window) and cap == window
-    slot = (pos % cap) if ring else pos
-    k_new = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=-3)
-    v_new = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=-3)
+    slot = (pos_rows % cap) if ring else pos_rows
+
+    def _upd(c, new, s):
+        return jax.lax.dynamic_update_slice_in_dim(c, new.astype(c.dtype), s, axis=0)
+
+    k_new = jax.vmap(_upd)(cache["k"], k, slot)
+    v_new = jax.vmap(_upd)(cache["v"], v, slot)
     if ring:
-        kv_valid = jnp.minimum(pos + 1, cap)
-        out = mha_reference(q, k_new, v_new, causal=False,
-                            kv_valid=jnp.broadcast_to(kv_valid, (x_t.shape[0],)))
+        kv_valid = jnp.minimum(pos_rows + 1, cap)
+        if cfg.use_flash_kernel:
+            from repro.kernels.flash_decode.ops import flash_decode
+
+            out = flash_decode(q, k_new, v_new, kv_valid=kv_valid)
+        else:
+            out = mha_reference(q, k_new, v_new, causal=False, kv_valid=kv_valid)
     else:
-        kv_valid = pos + 1
-        out = mha_reference(
-            q, k_new, v_new, causal=True, window=window, q_offset=pos,
-            kv_valid=jnp.broadcast_to(kv_valid, (x_t.shape[0],)),
-        )
+        kv_valid = pos_rows + 1
+        if cfg.use_flash_kernel:
+            from repro.kernels.flash_decode.ops import flash_decode
+
+            out = flash_decode(q, k_new, v_new, kv_valid=kv_valid,
+                               q_offset=pos_rows, window=window)
+        else:
+            out = mha_reference(q, k_new, v_new, causal=True, window=window,
+                                q_offset=pos_rows, kv_valid=kv_valid)
+    cdt = jnp.dtype(cfg.dtype)
+    y = jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt))
+    return y, {"k": k_new, "v": v_new}
+
+
+def attn_extend(p, x_c, cache, start, cfg: ModelConfig, *, window: int = 0):
+    """Chunked-prefill continuation: append a fixed-size chunk of C tokens
+    per row to a partially filled cache. x_c: [B,C,d]; start: [B] (or
+    scalar) tokens already cached per row. Rows past a request's real
+    prompt length ride along as padding — their K/V land ABOVE every real
+    query's causal horizon and are overwritten by later writes at the true
+    positions, so no n_valid mask is needed here (unlike the SSD block).
+    Ring caches (cap == window) are not supported. Returns (y, new_cache)."""
+    h = rmsnorm(p["norm"], x_c, cfg.norm_eps)
+    B, C, _ = x_c.shape
+    start_rows = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    positions = start_rows[:, None] + jnp.arange(C)[None, :]
+    q, k, v = _project_qkv(p, h, h, cfg, positions, positions, use_rope=True)
+    cap = cache["k"].shape[-3]
+    if window and cap == window and cfg.decode_long_window:
+        raise ValueError("attn_extend does not support ring KV caches "
+                         "(decode_long_window); use full-capacity caches")
+
+    def _upd(c, new, s):
+        return jax.lax.dynamic_update_slice_in_dim(c, new.astype(c.dtype), s, axis=0)
+
+    k_new = jax.vmap(_upd)(cache["k"], k, start_rows)
+    v_new = jax.vmap(_upd)(cache["v"], v, start_rows)
+    out = mha_reference(q, k_new, v_new, causal=True, window=window,
+                        q_offset=start_rows, kv_valid=start_rows + C)
     cdt = jnp.dtype(cfg.dtype)
     y = jnp.einsum("...shk,hkd->...sd", out, p["wo"].astype(cdt))
     return y, {"k": k_new, "v": v_new}

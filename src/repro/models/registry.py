@@ -40,6 +40,10 @@ class Model(NamedTuple):
     server_decode: Optional[Callable] = None  # (sp, smashed_t, scache, pos) -> (logits, scache)
     init_tower_cache: Optional[Callable] = None  # (batch, cap) -> cache
     init_server_cache: Optional[Callable] = None
+    # chunked-prefill continuation (continuous batching); None when the
+    # family can't extend a partial cache (vlm cross-attn, encdec, classifiers)
+    tower_extend: Optional[Callable] = None  # (tp, inputs_c, tcache, start, n_valid) -> (smashed_c, tcache)
+    server_extend: Optional[Callable] = None  # (sp, smashed_c, scache, start, n_valid) -> (logits [B,1,V], scache)
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +160,26 @@ def _decoder_model(cfg: ModelConfig) -> Model:
                             preferred_element_type=jnp.float32)
         return logits, scache
 
+    def tower_extend(tp, inputs_c, tcache, start, n_valid):
+        x = L.embed(tp["embed"], inputs_c["tokens"], cfg)  # [B,C]
+        ctx = {"start": start, "n_valid": n_valid}
+        x, tcache = tower_stack.extend(tp["blocks"], x, tcache, ctx)
+        return {"h": x}, tcache
+
+    def server_extend(sp, smashed_c, scache, start, n_valid):
+        ctx = {"start": start, "n_valid": n_valid}
+        x, scache = server_stack.extend(sp["blocks"], smashed_c["h"], scache, ctx)
+        # logits for each row's LAST REAL chunk token (padded tail is garbage)
+        B = x.shape[0]
+        nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+        x = x[jnp.arange(B), jnp.maximum(nv - 1, 0)][:, None]
+        x = L.rmsnorm(sp["norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("...d,dv->...v", x, sp["head"]["w"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, scache
+
+    can_extend = (not is_vlm and tower_stack.extend is not None
+                  and server_stack.extend is not None)
     return Model(
         cfg=cfg,
         init_tower=init_tower,
@@ -168,6 +192,8 @@ def _decoder_model(cfg: ModelConfig) -> Model:
         server_decode=server_decode,
         init_tower_cache=tower_stack.init_cache,
         init_server_cache=server_stack.init_cache,
+        tower_extend=tower_extend if can_extend else None,
+        server_extend=server_extend if can_extend else None,
     )
 
 

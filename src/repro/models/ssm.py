@@ -137,6 +137,80 @@ def mamba_prefill(p, x, cfg: ModelConfig):
     return out, cache
 
 
+def mamba_extend(p, x_c, cache, n_valid, cfg: ModelConfig):
+    """Chunked-prefill continuation: run a fixed-size chunk of C tokens
+    through the block, resuming from a decode cache. x_c: [B,C,d];
+    n_valid: [B] real (non-padding) tokens per row, 1 <= n_valid <= C.
+
+    Unlike attention (where padded K/V sit above every real query's causal
+    horizon), the SSD state update is a running reduction — a padded step
+    with garbage dt would decay and pollute the state. Padded steps are
+    therefore neutralised *after* softplus (dt = 0 -> exp(dt*A) = 1 and a
+    zero B-injection: an exact identity update), so the final state equals
+    a real-row-only scan. Conv history is carried as raw pre-silu tails,
+    matching mamba_prefill/mamba_decode, and the new tail is sliced at each
+    row's n_valid offset. Returns (y [B,C,d], new_cache); outputs at padded
+    positions are garbage and must be ignored by the caller."""
+    cdt = jnp.dtype(cfg.dtype)
+    d_in, H, N, W = _dims(cfg)
+    P = cfg.ssm_headdim
+    B_, C, _ = x_c.shape
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B_,))
+    h = rmsnorm(p["norm"], x_c, cfg.norm_eps)
+    z = jnp.einsum("bld,de->ble", h, p["wz"].astype(cdt))
+    xin = jnp.einsum("bld,de->ble", h, p["wx"].astype(cdt))
+    Bm = jnp.einsum("bld,dn->bln", h, p["wB"].astype(cdt))
+    Cm = jnp.einsum("bld,dn->bln", h, p["wC"].astype(cdt))
+    dt_ = jnp.einsum("bld,dh->blh", h, p["wdt"].astype(cdt))
+
+    def conv_extend(hist, new, w):
+        # hist: [B,W-1,D] raw tail; new: [B,C,D]. Valid (no left pad) conv
+        # over the concatenation — position t sees [t, t+W) of the full
+        # array, i.e. the W-1 cached steps plus the chunk, causally.
+        full = jnp.concatenate([hist.astype(new.dtype), new], axis=1)
+        y = sum(full[:, i : i + C, :] * w[i][None, None, :] for i in range(W))
+        tail = jax.vmap(
+            lambda f, n: jax.lax.dynamic_slice_in_dim(f, n, W - 1, axis=0)
+        )(full, n_valid)
+        return y, tail
+
+    xin_c, conv_x = conv_extend(cache["conv_x"], xin, p["conv_x"].astype(cdt))
+    Bm_c, conv_B = conv_extend(cache["conv_B"], Bm, p["conv_B"].astype(cdt))
+    Cm_c, conv_C = conv_extend(cache["conv_C"], Cm, p["conv_C"].astype(cdt))
+    xin_c = jax.nn.silu(xin_c)
+    Bm_c = jax.nn.silu(Bm_c)
+    Cm_c = jax.nn.silu(Cm_c)
+    dt_c = jax.nn.softplus(dt_.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    valid = (jnp.arange(C)[None, :] < n_valid[:, None])[:, :, None]
+    dt_c = jnp.where(valid, dt_c, 0.0)
+    A = -jnp.exp(p["A_log"])
+
+    xh = xin_c.reshape(B_, C, H, P)
+    chunk = cfg.ssm_chunk
+    Lp = -(-C // chunk) * chunk
+    if Lp != C:
+        padl = Lp - C
+        xh = jnp.pad(xh, ((0, 0), (0, padl), (0, 0), (0, 0)))
+        dt_c = jnp.pad(dt_c, ((0, 0), (0, padl), (0, 0)))
+        Bm_c = jnp.pad(Bm_c, ((0, 0), (0, padl), (0, 0)))
+        Cm_c = jnp.pad(Cm_c, ((0, 0), (0, padl), (0, 0)))
+    if cfg.use_flash_kernel:
+        from repro.kernels.ssd_scan.ops import ssd_scan
+
+        y, state = ssd_scan(xh, dt_c, A, Bm_c, Cm_c, chunk=chunk,
+                            initial_state=cache["state"])
+    else:
+        y, state = ssd_reference(xh, dt_c, A, Bm_c, Cm_c, chunk=chunk,
+                                 initial_state=cache["state"])
+    y = y[:, :C]
+    y = y + xin_c.reshape(B_, C, H, P) * p["D"][None, None, :, None].astype(cdt)
+    y = y.reshape(B_, C, d_in)
+    y = _gated_norm(p["gate_norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["wo"].astype(cdt))
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": state}
+    return out, new_cache
+
+
 def mamba_decode(p, x_t, cache, cfg: ModelConfig):
     """One-token decode. x_t: [B,1,d]. Returns (y_t [B,1,d], new_cache)."""
     cdt = jnp.dtype(cfg.dtype)

@@ -12,7 +12,7 @@ input; every application still gets its own KV cache.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ from repro.models.moe import moe_forward, moe_params
 from repro.models.ssm import (
     init_mamba_cache,
     mamba_decode,
+    mamba_extend,
     mamba_forward,
     mamba_params,
     mamba_prefill,
@@ -44,6 +45,9 @@ class Block(NamedTuple):
     prefill: Callable  # (p, x, ctx) -> (x, cache)
     decode: Callable  # (p, x_t, cache, ctx) -> (x_t, cache)
     init_cache: Callable  # (batch, cap) -> cache pytree
+    # chunked-prefill continuation for continuous batching; None when the
+    # kind can't extend a partial cache (bidir encoders, cross-attn decoders)
+    extend: Optional[Callable] = None  # (p, x_c, cache, ctx) -> (x_c, cache)
 
 
 def _attn_mlp_block(cfg: ModelConfig, window: int, causal: bool = True) -> Block:
@@ -72,7 +76,14 @@ def _attn_mlp_block(cfg: ModelConfig, window: int, causal: bool = True) -> Block
     def init_cache(batch, cap):
         return L.init_attn_cache(cfg, batch, cap, window=window)
 
-    return Block(init, forward, prefill, decode, init_cache)
+    def extend(p, x_c, cache, ctx):
+        a, cache = L.attn_extend(p["attn"], x_c, cache, ctx["start"], cfg, window=window)
+        x_c = x_c + a
+        x_c = x_c + L.mlp_forward(p["mlp"], x_c, cfg)
+        return x_c, cache
+
+    return Block(init, forward, prefill, decode, init_cache,
+                 extend if causal else None)
 
 
 def _cross_block(cfg: ModelConfig, self_window: int = 0) -> Block:
@@ -139,7 +150,13 @@ def _moe_block(cfg: ModelConfig) -> Block:
     def init_cache(batch, cap):
         return L.init_attn_cache(cfg, batch, cap)
 
-    return Block(init, forward, prefill, decode, init_cache)
+    def extend(p, x_c, cache, ctx):
+        a, cache = L.attn_extend(p["attn"], x_c, cache, ctx["start"], cfg)
+        x_c = x_c + a
+        y, _ = moe_forward(p["moe"], x_c, cfg)
+        return x_c + y, cache
+
+    return Block(init, forward, prefill, decode, init_cache, extend)
 
 
 def _mamba_block(cfg: ModelConfig) -> Block:
@@ -160,7 +177,11 @@ def _mamba_block(cfg: ModelConfig) -> Block:
     def init_cache(batch, cap):
         return init_mamba_cache(cfg, batch)
 
-    return Block(init, forward, prefill, decode, init_cache)
+    def extend(p, x_c, cache, ctx):
+        y, cache = mamba_extend(p["mamba"], x_c, cache, ctx["n_valid"], cfg)
+        return x_c + y, cache
+
+    return Block(init, forward, prefill, decode, init_cache, extend)
 
 
 def _shared_attn_block(cfg: ModelConfig) -> Block:
@@ -200,7 +221,15 @@ def _shared_attn_block(cfg: ModelConfig) -> Block:
             "mamba": init_mamba_cache(cfg, batch),
         }
 
-    return Block(init, forward, prefill, decode, init_cache)
+    def extend(p, x_c, cache, ctx):
+        sp = ctx["shared"]
+        a, acache = L.attn_extend(sp["attn"], x_c, cache["attn"], ctx["start"], cfg)
+        x_c = x_c + a
+        x_c = x_c + L.mlp_forward(sp["mlp"], x_c, cfg)
+        x_c, mcache = mamba.extend(p, x_c, cache["mamba"], ctx)
+        return x_c, {"attn": acache, "mamba": mcache}
+
+    return Block(init, forward, prefill, decode, init_cache, extend)
 
 
 def make_block(cfg: ModelConfig, kind: str) -> Block:
@@ -292,6 +321,8 @@ class Stack(NamedTuple):
     decode: Callable  # (p, x_t, caches, ctx) -> (x_t, caches)
     init_cache: Callable  # (batch, cap) -> caches
     num_layers: int
+    # chunked-prefill continuation; None when any layer kind lacks extend
+    extend: Optional[Callable] = None  # (p, x_c, caches, ctx) -> (x_c, caches)
 
 
 def make_stack(cfg: ModelConfig, kinds: Sequence[str], has_shared: bool = False) -> Stack:
@@ -410,6 +441,34 @@ def make_stack(cfg: ModelConfig, kinds: Sequence[str], has_shared: bool = False)
             new_caches[f"seg{si}"] = ncs
         return x_t, new_caches
 
+    def extend(p, x_c, caches, ctx):
+        ctx = _ctx_with_shared(p, ctx)
+        new_caches = {}
+        for si, (blocks, rep) in enumerate(zip(seg_blocks, seg_repeats)):
+            sp = p[f"seg{si}"]
+            cs = caches[f"seg{si}"]
+
+            def unit_ext(px, x_c, cx, blocks=blocks, ctx=ctx):
+                ncs = {}
+                for j, b in enumerate(blocks):
+                    x_c, nc = b.extend(px[str(j)], x_c, cx[str(j)], ctx)
+                    ncs[str(j)] = nc
+                return x_c, ncs
+
+            if rep > 1:
+                def scan_body(x_c, pc, unit_ext=unit_ext):
+                    px, cx = pc
+                    x_c, nc = unit_ext(px, x_c, cx)
+                    return x_c, nc
+
+                x_c, ncs = jax.lax.scan(scan_body, x_c, (sp, cs))
+            else:
+                x_c, ncs = unit_ext(sp, x_c, cs)
+            new_caches[f"seg{si}"] = ncs
+        return x_c, new_caches
+
+    can_extend = all(b.extend is not None for blocks in seg_blocks for b in blocks)
+
     def init_cache(batch, cap):
         caches = {}
         for si, (blocks, rep) in enumerate(zip(seg_blocks, seg_repeats)):
@@ -424,4 +483,5 @@ def make_stack(cfg: ModelConfig, kinds: Sequence[str], has_shared: bool = False)
             caches[f"seg{si}"] = unit_c
         return caches
 
-    return Stack(init, forward, prefill, decode, init_cache, len(kinds))
+    return Stack(init, forward, prefill, decode, init_cache, len(kinds),
+                 extend if can_extend else None)

@@ -1,1 +1,10 @@
 from repro.serve.engine import ServeEngine, build_prefill_step, build_decode_step
+from repro.serve.continuous import ContinuousEngine, Request
+
+__all__ = [
+    "ServeEngine",
+    "ContinuousEngine",
+    "Request",
+    "build_prefill_step",
+    "build_decode_step",
+]

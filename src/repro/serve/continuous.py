@@ -1,0 +1,428 @@
+"""Continuous-batching serve engine: a fixed pool of cache *slots* shared by
+requests that arrive, prefill in chunks, decode, and leave — all under exactly
+two jitted step functions whose shapes never change, so admission/eviction
+never recompiles.
+
+Design (vLLM-style, adapted to the MTSL split serving path):
+
+  * Slot pool. Tower and server KV/SSM caches are allocated once with shape
+    [slots, ...] and capacity `cap` (max_len rounded up to a chunk multiple).
+    Each slot carries per-row scalars: pos (tokens cached), tok (last sampled
+    token), client (which tower serves it), remaining (tokens still to emit),
+    a PRNG key and a temperature. A request is "admitted" by streaming its
+    prompt through `extend_step` in fixed-size chunks and "evicted" by the
+    host simply marking the slot free — the next occupant's first chunk
+    zeroes the slot's caches in-jit.
+
+  * decode_step(params, state) — the hot path. Gathers each slot's client
+    tower parameters, runs batch-1 tower decode under vmap (slots sit at
+    different depths, so per-row positions), one batched server decode over
+    all slots, and samples the next token *inside the jit* (per-slot key
+    folded with the slot's position — no per-token device->host sync; tokens
+    accumulate in a device-side [slots, cap] buffer). Inactive slots ride
+    along but their caches are frozen (where-masked) so a mid-prefill or
+    free slot can never corrupt its own state by decoding garbage.
+
+  * extend_step(params, state, chunk, ...) — chunked prefill of ONE request.
+    All scheduling facts (slot, client, start, n_valid, is_first, is_last,
+    temperature, key, new_tokens) are traced scalars, so every chunk of every
+    request reuses one compilation. The final chunk samples the request's
+    first output token at its true last-prompt position, exactly like the
+    sequential engine's prefill+sample.
+
+  * Host scheduler. `submit()` queues requests; `run()` loops: admit at most
+    one prefill chunk per iteration (chunked prefill interleaved with the
+    running decode batch), then one decode step if any slot is active. All
+    bookkeeping is host-mirrored, so the loop never blocks on the device;
+    completed rows are sliced off asynchronously and materialized once at
+    the end.
+
+Caveats: families whose decode needs per-step side inputs (vlm cross-attn,
+encdec) have no `tower_extend` and are rejected — `ServeEngine.generate`
+falls back to the sequential path for them. MoE capacity is shared across
+the slot batch, so under capacity pressure co-resident requests can
+interact; dense/ssm/hybrid rows are strictly independent.
+
+Greedy decoding is token-for-token identical to the sequential engine per
+request (pinned by tests/test_serve_continuous.py over mixed prompt lengths).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    """One generation request. `key` overrides the engine-derived PRNG key
+    (used by ServeEngine.generate for rng-reproducible sampling)."""
+
+    id: int
+    client: int
+    tokens: Sequence[int]
+    new_tokens: int
+    temperature: float = 0.0
+    key: Optional[jax.Array] = None
+    # host bookkeeping (benchmarks): arrival time in the caller's clock
+    arrival: float = 0.0
+
+
+@dataclass
+class _Admission:
+    """Host-side progress of an in-flight chunked prefill."""
+
+    req: Request
+    slot: int
+    done_tokens: int = 0
+
+
+def _slot_axes(template_b1, template_b2) -> List[Optional[int]]:
+    """Per-leaf axis carrying the batch/slot dimension, found by diffing the
+    cache structure at batch sizes 1 and 2 (scanned segments prepend a layer
+    axis, so the slot axis is not uniformly 0)."""
+    l1 = jax.tree.leaves(template_b1)
+    l2 = jax.tree.leaves(template_b2)
+    axes: List[Optional[int]] = []
+    for a, b in zip(l1, l2):
+        ax = None
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                ax = i
+                break
+        axes.append(ax)
+    return axes
+
+
+def _bcast_to_axis(vec, ndim: int, axis: int):
+    """Reshape [S] so it broadcasts along `axis` of an ndim-rank array."""
+    shape = [1] * ndim
+    shape[axis] = vec.shape[0]
+    return vec.reshape(shape)
+
+
+class ContinuousEngine:
+    """Slot-based continuous batching over a split (tower/server) model."""
+
+    def __init__(self, model: Model, params, num_clients: int, max_len: int,
+                 *, slots: int = 8, chunk: int = 8,
+                 rng: Optional[jax.Array] = None):
+        if model.tower_extend is None or model.server_extend is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} does not support chunked prefill"
+                " (no tower_extend); use the sequential engine")
+        if model.cfg.decode_long_window:
+            raise ValueError(
+                "continuous batching does not support ring KV caches"
+                " (decode_long_window); use the sequential engine")
+        self.model = model
+        self.params = params
+        self.M = num_clients
+        self.max_len = max_len
+        self.slots = slots
+        self.chunk = chunk
+        # capacity: chunk multiple >= max_len, so chunked extend writes a
+        # full [chunk] block without ever clamping out of bounds
+        self.cap = -(-max_len // chunk) * chunk
+        self._rng = jax.random.PRNGKey(0) if rng is None else rng
+
+        cap, S = self.cap, slots
+        t1 = model.init_tower_cache(1, cap)
+        self._state = {
+            "tower": jax.tree.map(
+                lambda x: jnp.zeros((S,) + x.shape, x.dtype), t1),
+            "server": model.init_server_cache(S, cap),
+            "pos": jnp.zeros((S,), jnp.int32),
+            "tok": jnp.zeros((S,), jnp.int32),
+            "client": jnp.zeros((S,), jnp.int32),
+            "remaining": jnp.zeros((S,), jnp.int32),
+            "n_out": jnp.zeros((S,), jnp.int32),
+            "key": jnp.zeros((S, 2), jnp.uint32),
+            "temp": jnp.zeros((S,), jnp.float32),
+            "out": jnp.zeros((S, cap), jnp.int32),
+        }
+        self._server_axes = tuple(_slot_axes(
+            jax.eval_shape(lambda: model.init_server_cache(1, cap)),
+            jax.eval_shape(lambda: model.init_server_cache(2, cap)),
+        ))
+        # donation saves the slot-cache copy per step on accelerators; on CPU
+        # it only emits "unusable donation" warnings, so skip it there
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._decode_step = jax.jit(self._build_decode_step(),
+                                    donate_argnums=donate)
+        self._extend_step = jax.jit(self._build_extend_step(),
+                                    donate_argnums=donate)
+
+        # host mirrors (never read back from device for scheduling)
+        self._free: List[int] = list(range(slots))
+        self._slot_remaining = [0] * slots
+        self._slot_emitted = [0] * slots
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self._pending: List[Request] = []
+        self._admitting: Optional[_Admission] = None
+        self._results: Dict[int, Any] = {}
+        self.stats = {"extend_steps": 0, "decode_steps": 0, "admitted": 0,
+                      "decode_slot_tokens": 0}
+        self.trace: List[tuple] = []
+
+    # ------------------------------------------------------------------
+    # jitted steps
+    # ------------------------------------------------------------------
+
+    def _build_decode_step(self):
+        model, S = self.model, self.slots
+
+        def decode_step(params, state):
+            active = state["remaining"] > 0
+            tp = jax.tree.map(lambda x: x[state["client"]], params["towers"])
+            inputs = {"tokens": state["tok"].reshape(S, 1, 1)}
+
+            smashed, tcache = jax.vmap(
+                lambda tpp, inp, tc, pos: model.tower_decode(tpp, inp, tc, pos)
+            )(tp, inputs, state["tower"], state["pos"])
+            flat = {"h": smashed["h"].reshape(S, 1, -1)}
+            logits, scache = model.server_decode(
+                params["server"], flat, state["server"], state["pos"])
+
+            # freeze caches of inactive slots (mid-prefill rows would
+            # otherwise corrupt their own SSM state by decoding garbage)
+            tcache = jax.tree.map(
+                lambda new, old: jnp.where(
+                    _bcast_to_axis(active, new.ndim, 0), new, old),
+                tcache, state["tower"])
+            s_new = jax.tree.leaves(scache)
+            s_old = jax.tree.leaves(state["server"])
+            s_keep = [
+                new if ax is None else jnp.where(
+                    _bcast_to_axis(active, new.ndim, ax), new, old)
+                for new, old, ax in zip(s_new, s_old, self._server_axes)
+            ]
+            scache = jax.tree.unflatten(
+                jax.tree.structure(state["server"]), s_keep)
+
+            # in-jit sampling: per-slot key folded with the slot's position
+            lg = logits[:, -1, :]
+            keys = jax.vmap(jax.random.fold_in)(state["key"], state["pos"])
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            temp = state["temp"]
+            sampled = jax.vmap(
+                lambda k, l, t: jax.random.categorical(
+                    k, l / jnp.maximum(t, 1e-6))
+            )(keys, lg, temp).astype(jnp.int32)
+            chosen = jnp.where(temp > 0.0, sampled, greedy)
+            tok = jnp.where(active, chosen, state["tok"])
+
+            rows = jnp.arange(S)
+            cur = state["out"][rows, state["n_out"]]
+            out = state["out"].at[rows, state["n_out"]].set(
+                jnp.where(active, tok, cur))
+            act = active.astype(jnp.int32)
+            return {
+                **state,
+                "tower": tcache,
+                "server": scache,
+                "tok": tok,
+                "pos": state["pos"] + act,
+                "remaining": state["remaining"] - act,
+                "n_out": state["n_out"] + act,
+                "out": out,
+            }
+
+        return decode_step
+
+    def _build_extend_step(self):
+        model = self.model
+
+        def extend_step(params, state, chunk_tokens, slot, client, start,
+                        n_valid, is_first, is_last, temp, req_key, new_tokens):
+            # extract this slot's caches (batch-1 views); first chunk zeroes
+            # them so the previous occupant can never leak through
+            tc = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=0)[0],
+                state["tower"])
+            tc = jax.tree.map(
+                lambda x: jnp.where(is_first, jnp.zeros_like(x), x), tc)
+            s_flat = jax.tree.leaves(state["server"])
+            s_def = jax.tree.structure(state["server"])
+            sc_flat = [
+                x if ax is None
+                else jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax)
+                for x, ax in zip(s_flat, self._server_axes)
+            ]
+            sc_flat = [
+                x if ax is None else jnp.where(is_first, jnp.zeros_like(x), x)
+                for x, ax in zip(sc_flat, self._server_axes)
+            ]
+            sc = jax.tree.unflatten(s_def, sc_flat)
+
+            tp = jax.tree.map(lambda x: x[client], params["towers"])
+            smashed, tc = model.tower_extend(
+                tp, {"tokens": chunk_tokens[None, :]}, tc, start, n_valid)
+            logits, sc = model.server_extend(
+                params["server"], smashed, sc, start, n_valid)
+
+            # write the slot back
+            tower = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                    full, new[None], slot, axis=0),
+                state["tower"], tc)
+            sc_new = jax.tree.leaves(sc)
+            s_out = [
+                old if ax is None
+                else jax.lax.dynamic_update_slice_in_dim(old, new, slot, axis=ax)
+                for old, new, ax in zip(s_flat, sc_new, self._server_axes)
+            ]
+            server = jax.tree.unflatten(s_def, s_out)
+
+            # final chunk: sample the first output token at the last real
+            # prompt position (same key schedule as decode_step)
+            last_pos = start + n_valid - 1
+            k = jax.random.fold_in(req_key, last_pos)
+            lg = logits[0, -1, :]
+            greedy = jnp.argmax(lg).astype(jnp.int32)
+            sampled = jax.random.categorical(
+                k, lg / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+            tok0 = jnp.where(temp > 0.0, sampled, greedy)
+
+            upd = lambda arr, val: arr.at[slot].set(val)  # noqa: E731
+            return {
+                **state,
+                "tower": tower,
+                "server": server,
+                "pos": upd(state["pos"], start + n_valid),
+                "tok": upd(state["tok"], jnp.where(is_last, tok0,
+                                                   state["tok"][slot])),
+                "client": upd(state["client"], client),
+                "remaining": upd(state["remaining"],
+                                 jnp.where(is_last, new_tokens - 1, 0)),
+                "n_out": upd(state["n_out"],
+                             jnp.where(is_last, 1, 0).astype(jnp.int32)),
+                "key": upd(state["key"], req_key),
+                "temp": upd(state["temp"], temp),
+                "out": state["out"].at[slot, 0].set(
+                    jnp.where(is_last, tok0, state["out"][slot, 0])),
+            }
+
+        return extend_step
+
+    # ------------------------------------------------------------------
+    # host scheduler
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request):
+        L = len(req.tokens)
+        if L < 1 or L + req.new_tokens - 1 > self.cap:
+            raise ValueError(
+                f"request {req.id}: prompt {L} + new {req.new_tokens} exceeds"
+                f" capacity {self.cap}")
+        if not (0 <= req.client < self.M):
+            raise ValueError(f"request {req.id}: client {req.client} not in"
+                             f" [0, {self.M})")
+        self._pending.append(req)
+
+    def _issue_chunk(self):
+        """Run one extend_step for the in-flight admission (starting one if
+        a slot is free). Returns True if a chunk was issued."""
+        if self._admitting is None:
+            if not self._pending or not self._free:
+                return False
+            req = self._pending.pop(0)
+            self._admitting = _Admission(req, self._free.pop(0))
+            self.stats["admitted"] += 1
+        adm = self._admitting
+        req, C = adm.req, self.chunk
+        L = len(req.tokens)
+        start = adm.done_tokens
+        n_valid = min(C, L - start)
+        is_last = start + n_valid >= L
+        chunk = np.zeros((C,), np.int32)
+        chunk[:n_valid] = np.asarray(req.tokens[start:start + n_valid],
+                                     np.int32)
+        key = req.key
+        if key is None:
+            key = jax.random.fold_in(self._rng, req.id)
+        self._state = self._extend_step(
+            self.params, self._state, jnp.asarray(chunk),
+            np.int32(adm.slot), np.int32(req.client), np.int32(start),
+            np.int32(n_valid), np.bool_(start == 0), np.bool_(is_last),
+            np.float32(req.temperature), jnp.asarray(key, jnp.uint32),
+            np.int32(req.new_tokens))
+        adm.done_tokens = start + n_valid
+        self.stats["extend_steps"] += 1
+        self.trace.append(("extend", adm.slot, n_valid, is_last))
+        if is_last:
+            s = adm.slot
+            self._slot_req[s] = req
+            self._slot_remaining[s] = req.new_tokens - 1
+            self._slot_emitted[s] = 1
+            self._admitting = None
+            self._maybe_finish(s)
+        return True
+
+    def _maybe_finish(self, s: int):
+        if self._slot_req[s] is not None and self._slot_remaining[s] == 0:
+            req = self._slot_req[s]
+            n = self._slot_emitted[s]
+            # async device-side slice; materialized once in run()
+            self._results[req.id] = self._state["out"][s, :n]
+            self._slot_req[s] = None
+            self._free.append(s)
+
+    def _decode_once(self):
+        if not any(self._slot_req[s] is not None and self._slot_remaining[s] > 0
+                   for s in range(self.slots)):
+            return False
+        self._state = self._decode_step(self.params, self._state)
+        self.stats["decode_steps"] += 1
+        n_active = 0
+        for s in range(self.slots):
+            if self._slot_req[s] is not None and self._slot_remaining[s] > 0:
+                self._slot_remaining[s] -= 1
+                self._slot_emitted[s] += 1
+                n_active += 1
+                self._maybe_finish(s)
+        self.stats["decode_slot_tokens"] += n_active
+        self.trace.append(("decode", n_active))
+        return True
+
+    def run(self):
+        """Process every submitted request to completion. Returns
+        {request id -> int32 array of new_tokens sampled tokens}."""
+        while True:
+            issued = self._issue_chunk()
+            decoded = self._decode_once()
+            if not issued and not decoded:
+                break
+        out = {rid: np.asarray(toks) for rid, toks in self._results.items()}
+        self._results.clear()
+        return out
+
+    # ------------------------------------------------------------------
+    # benchmark entry points (phase-separated, no interleaving)
+    # ------------------------------------------------------------------
+
+    def sync(self):
+        """Block until all queued device work is done."""
+        jax.block_until_ready(jax.tree.leaves(self._state))
+
+    def prefill_all(self) -> int:
+        """Admit every pending request (chunked prefill only, no decode).
+        Returns the number of extend steps issued."""
+        n = 0
+        while self._issue_chunk():
+            n += 1
+        return n
+
+    def decode_all(self) -> int:
+        """Decode until no slot is active. Returns slot-tokens emitted."""
+        t0 = self.stats["decode_slot_tokens"]
+        while self._decode_once():
+            pass
+        return self.stats["decode_slot_tokens"] - t0

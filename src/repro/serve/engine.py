@@ -14,6 +14,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import Model
 
@@ -64,8 +65,13 @@ def build_decode_step(model: Model, num_clients: int) -> Callable:
 
 
 class ServeEngine:
-    """Host-side orchestration: greedy/temperature generation over the jitted
-    prefill/decode steps."""
+    """Host-side orchestration: greedy/temperature generation.
+
+    `generate` routes decoder families through the continuous-batching
+    scheduler (serve/continuous.py) — one request per (client, row), greedy
+    output token-for-token equal to the retained `generate_sequential`
+    batched-prefill loop, which stays as the fallback for families without
+    chunked prefill (vlm, encdec)."""
 
     def __init__(self, model: Model, params, num_clients: int, max_len: int):
         self.model = model
@@ -74,6 +80,7 @@ class ServeEngine:
         self.max_len = max_len
         self._prefill = jax.jit(build_prefill_step(model, num_clients, max_len))
         self._decode = jax.jit(build_decode_step(model, num_clients))
+        self._cont = {}  # (b, S) -> ContinuousEngine
 
     def generate(
         self,
@@ -83,6 +90,45 @@ class ServeEngine:
         rng: Optional[jax.Array] = None,
     ):
         """inputs: {tokens: [M,b,S], ...}; returns [M, b, new_tokens]."""
+        if self.model.tower_extend is None or self.model.cfg.decode_long_window:
+            return self.generate_sequential(inputs, new_tokens, temperature, rng)
+        from repro.serve.continuous import ContinuousEngine, Request
+
+        M = self.M
+        prompt = inputs["tokens"]
+        b, S = prompt.shape[1], prompt.shape[2]
+        key = (b, S)
+        if key not in self._cont:
+            # chunk = prompt length: whole-prompt extend, one slot per row
+            self._cont[key] = ContinuousEngine(
+                self.model, self.params, M, self.max_len,
+                slots=M * b, chunk=S)
+        eng = self._cont[key]
+        toks = jnp.asarray(prompt)
+        for m in range(M):
+            for j in range(b):
+                rid = m * b + j
+                rkey = None
+                if temperature > 0.0 and rng is not None:
+                    rkey = jax.random.fold_in(rng, rid)
+                eng.submit(Request(
+                    id=rid, client=m, tokens=np.asarray(toks[m, j]),
+                    new_tokens=new_tokens,
+                    temperature=temperature if rng is not None else 0.0,
+                    key=rkey))
+        res = eng.run()
+        out = np.stack([res[m * b + j] for m in range(M) for j in range(b)])
+        return jnp.asarray(out.reshape(M, b, new_tokens), jnp.int32)
+
+    def generate_sequential(
+        self,
+        inputs,
+        new_tokens: int,
+        temperature: float = 0.0,
+        rng: Optional[jax.Array] = None,
+    ):
+        """Deprecated batched-prefill + lockstep-decode loop (all rows enter
+        and leave together). inputs: {tokens: [M,b,S], ...}."""
         M = self.M
         prompt = inputs["tokens"]
         b, S = prompt.shape[1], prompt.shape[2]
@@ -102,5 +148,10 @@ class ServeEngine:
         logits = logits[:, -1, :]
         if temperature <= 0.0 or rng is None:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        key = jax.random.fold_in(rng, step)
-        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+        # fold the row index into the key: rows must sample INDEPENDENTLY
+        # (a shared key would correlate same-step draws across requests)
+        rows = jnp.arange(logits.shape[0])
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            jax.random.fold_in(rng, step), rows)
+        return jax.vmap(jax.random.categorical)(
+            keys, logits / temperature).astype(jnp.int32)

@@ -16,8 +16,8 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks import (async_rounds, fig5_participation, throughput,
-                        time_to_accuracy)
+from benchmarks import (async_rounds, fig5_participation, serving_load,
+                        throughput, time_to_accuracy)
 
 
 @pytest.mark.slow
@@ -109,3 +109,36 @@ def test_async_rounds_quick_end_to_end(tmp_path):
     s = d["arms"]["sync"]["sim_s_to_target"]
     a = d["arms"]["async"]["sim_s_to_target"]
     assert a is not None and (s is None or a < s)
+
+
+@pytest.mark.slow
+def test_serving_load_quick_end_to_end(tmp_path):
+    """PR acceptance artifact: under a saturating heavy-tailed open-loop
+    stream over the star Topology, continuous batching must sustain higher
+    tokens/s AND lower p99 TTFT than the sequential FCFS-batch engine, and
+    the real continuous engine must be greedy-parity with the real
+    sequential one."""
+    path = tmp_path / "serving.json"
+    rows = serving_load.run(quick=True, json_path=str(path))
+    assert rows and all(len(r) == 3 for r in rows)
+    claims = [r for r in rows if "claim" in r[0]]
+    assert len(claims) == 3 and all(r[2] == "PASS" for r in claims)
+
+    d = json.loads(path.read_text())
+    assert d["benchmark"] == "serving_load"
+    assert set(d["arms"]) == {"sequential", "continuous"}
+    for arm in d["arms"].values():
+        assert arm["tokens_per_s"] > 0
+        assert 0 < arm["busy_s"] <= arm["makespan_s"] + 1e-9
+        assert arm["ttft_p50_s"] <= arm["ttft_p99_s"]
+        assert arm["uplink_bytes"] > 0 and arm["downlink_bytes"] > 0
+    seq, cont = d["arms"]["sequential"], d["arms"]["continuous"]
+    # both arms replayed the identical seeded workload + link bills
+    assert seq["total_tokens"] == cont["total_tokens"]
+    assert seq["uplink_bytes"] == cont["uplink_bytes"]
+    # the sim is deterministic, so the headline claims are exact
+    assert d["claims"]["continuous_higher_tokens_per_s"] is True
+    assert cont["tokens_per_s"] > seq["tokens_per_s"]
+    assert d["claims"]["continuous_lower_p99_ttft"] is True
+    assert cont["ttft_p99_s"] < seq["ttft_p99_s"]
+    assert d["claims"]["greedy_parity_smoke"] is True
