@@ -4,3 +4,16 @@ from repro.data.synthetic import (
 )
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
+from repro.data.shards import (
+    CachedClientDataset,
+    InMemoryClientDataset,
+    ShardableDataset,
+    build_cache,
+    build_dirichlet_cache,
+    cache_fingerprint,
+    dirichlet_partition,
+    load_cache,
+    materialize_dirichlet,
+    materialize_source,
+    pooled_corpus,
+)

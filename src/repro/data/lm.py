@@ -49,7 +49,13 @@ class MultiTaskLMSource:
         out[:, 0] = state
         for t in range(1, seq):
             u = rng.random(batch)
-            state = (cum[state] < u[:, None]).sum(axis=1)
+            # clamp the inverse-CDF draw: fp rounding can leave cum's last
+            # column below 1.0, and a u above it would yield state ==
+            # vocab_size — an out-of-range token that IndexErrors cum[state]
+            # on the next step (the clamp only fires on that overflow, so
+            # existing seeded streams are unchanged)
+            state = np.minimum((cum[state] < u[:, None]).sum(axis=1),
+                               self.vocab_size - 1)
             out[:, t] = state
         return out
 
@@ -78,7 +84,9 @@ class MultiTaskLMSource:
         midx = np.arange(M)[:, None]
         for t in range(1, seq):
             u = rng.random((M, b))
-            state = (cums[midx, state] < u[..., None]).sum(axis=-1)
+            # same overflow clamp as the per-client path above
+            state = np.minimum(
+                (cums[midx, state] < u[..., None]).sum(axis=-1), V - 1)
             out[..., t] = state
         return out
 

@@ -9,6 +9,14 @@ no device transfer) — that is what the async round pipeline
 (train/pipeline.py) wants: batch synthesis runs on a background thread and
 the consumer stages the arrays with `jax.device_put` one round before they
 are needed. Values are identical either way.
+
+The source can be a synthesis source (`MultiTaskImageSource` /
+`MultiTaskLMSource`) or any `ShardableDataset` (data/shards.py): with a
+dataset, each round is a deterministic mmap'd shard READ keyed on
+`(seed, round)` — the background thread stops synthesizing and the data
+path stays off the critical path at massive M. Cached rounds are random
+access, so `start_round` lets a resumed run seek mid-stream instead of
+replaying and discarding consumed rounds.
 """
 from __future__ import annotations
 
@@ -29,13 +37,36 @@ def client_batches(
     sharding=None,
     as_numpy: bool = False,
     vectorized: bool = False,
+    start_round: int = 0,
 ) -> Iterator[dict]:
-    """Yield batches from a MultiTaskImageSource or MultiTaskLMSource.
+    """Yield batches from a source or a ShardableDataset (data/shards.py).
 
     `vectorized=True` draws each round's batch with the sources' batched
     across-clients RNG paths — same distribution from a different seeded
     stream, host cost per client flat in M (massive-M runs; the default
-    per-client loop's draw order is pinned by the parity goldens)."""
+    per-client loop's draw order is pinned by the parity goldens). It has
+    no effect on datasets (their reads are already flat per client)."""
+
+    def _emit(batch):
+        if not as_numpy:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if sharding is not None:
+            batch = jax.tree.map(lambda a: jax.device_put(a, sharding), batch)
+        return batch
+
+    if hasattr(source, "round_batch"):  # ShardableDataset: cached reads
+        kwargs = {"seq_len": seq_len} if source.kind == "lm" else {}
+        i = 0
+        while steps is None or i < steps:
+            yield _emit(source.round_batch(seed, start_round + i,
+                                           batch_per_client, **kwargs))
+            i += 1
+        return
+    if start_round:
+        raise ValueError(
+            "start_round requires a ShardableDataset source: synthesis "
+            "sources are sequential streams — replay them and slice off "
+            "the consumed rounds instead")
     rng = np.random.default_rng(seed)
     i = 0
     is_lm = hasattr(source, "chains")
@@ -48,9 +79,5 @@ def client_batches(
             x, y = source.all_tasks_batch(rng, batch_per_client,
                                           vectorized=vectorized)
             batch = {"image": np.asarray(x), "label": np.asarray(y, np.int32)}
-        if not as_numpy:
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        if sharding is not None:
-            batch = jax.tree.map(lambda a: jax.device_put(a, sharding), batch)
-        yield batch
+        yield _emit(batch)
         i += 1

@@ -25,6 +25,14 @@ algorithm's knobs get CLI exposure with no launcher change; the historic
 per-algorithm flags (--prox-mu, --momentum, --num-clusters) remain as
 deprecated aliases.
 
+`--data cached --cache-dir D` swaps per-round host synthesis for
+deterministic mmap'd shard reads from a build-once on-disk cache
+(data/shards.py; built on first use, or offline via
+tools/cache_dataset.py). `--dirichlet-alpha A` builds the cache as a
+Dirichlet(A) non-IID partition of a pooled corpus — the standard
+heterogeneity protocol. Iteration is resharding-invariant: the same
+(seed, round) yields the same round batch for any shard count or mesh.
+
 `--topology` deploys the run on an explicit edge graph (core/topology.py):
 star | clustered | hierarchical | multi-server, with per-link physics from
 --uplink-mbps/--downlink-mbps/--backbone-mbps/--link-latency-ms. The
@@ -53,6 +61,7 @@ from repro.core.algorithms import (
 )
 from repro.core.schedule import ScheduleConfig, padded_batch_per_client
 from repro.core.topology import TOPOLOGIES, build_topology, mbps
+from repro.data import shards
 from repro.data.lm import MultiTaskLMSource
 from repro.data.pipeline import client_batches
 from repro.data.synthetic import MultiTaskImageSource
@@ -99,6 +108,44 @@ def parse_hp_overrides(items) -> dict:
         except (ValueError, argparse.ArgumentTypeError) as e:
             raise SystemExit(f"bad --hp {item!r}: {e}") from None
     return out
+
+
+def _cached_dataset(args, src, M, is_classifier):
+    """Open (or build-once) the on-disk client cache for --data cached."""
+    if not args.cache_dir:
+        raise SystemExit("--data cached requires --cache-dir")
+    seq = None if is_classifier else args.seq_len
+    try:
+        ds = shards.load_cache(args.cache_dir)
+    except FileNotFoundError:
+        if args.dirichlet_alpha is not None:
+            # the standard non-IID protocol: pool an IID corpus, then
+            # Dirichlet(alpha)-partition it across the M clients
+            corpus = shards.pooled_corpus(src, M * args.cache_examples,
+                                          seed=args.seed, seq_len=seq)
+            shards.build_dirichlet_cache(args.cache_dir, corpus, M,
+                                         args.dirichlet_alpha,
+                                         seed=args.seed)
+        else:
+            shards.build_cache(args.cache_dir, src, args.cache_examples,
+                               seq_len=seq, seed=args.seed)
+        print(f"built client cache at {args.cache_dir}")
+        ds = shards.load_cache(args.cache_dir)
+    if ds.num_clients_total != M:
+        raise SystemExit(
+            f"cache at {args.cache_dir!r} holds {ds.num_clients_total} "
+            f"clients but the run needs {M} (rebuild with "
+            f"tools/cache_dataset.py or point --cache-dir elsewhere)")
+    want_kind = "image" if is_classifier else "lm"
+    if ds.kind != want_kind:
+        raise SystemExit(
+            f"cache at {args.cache_dir!r} is kind {ds.kind!r} but --arch "
+            f"needs {want_kind!r}")
+    if seq is not None and ds.seq_len is not None and seq > ds.seq_len:
+        raise SystemExit(
+            f"--seq-len {seq} exceeds the cached sequence length "
+            f"{ds.seq_len} at {args.cache_dir!r}")
+    return ds
 
 
 def main(argv=None):
@@ -204,6 +251,26 @@ def main(argv=None):
                          "compile time/memory stay flat as --arch's client "
                          "count grows; must divide num-clients (and be a "
                          "multiple of the mesh's client-shard count)")
+    ap.add_argument("--data", default="synthetic",
+                    choices=["synthetic", "cached"],
+                    help="data path: 'synthetic' re-synthesizes every "
+                         "round's batch on the host; 'cached' reads "
+                         "deterministic mmap'd shards from --cache-dir "
+                         "(data/shards.py — built on first use if missing; "
+                         "the background thread then stays off the "
+                         "critical path at massive M)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="cache directory for --data cached (see "
+                         "tools/cache_dataset.py for offline builds)")
+    ap.add_argument("--dirichlet-alpha", type=float, default=None,
+                    help="with --data cached: build the cache as a "
+                         "Dirichlet(alpha) non-IID partition of a pooled "
+                         "corpus (the FedProx/ParallelSFL heterogeneity "
+                         "protocol) instead of per-client streams; small "
+                         "alpha = near-disjoint client label distributions")
+    ap.add_argument("--cache-examples", type=int, default=512,
+                    help="examples per client materialized when the cache "
+                         "is built on first use (--data cached)")
     ap.add_argument("--vectorized-data", action="store_true",
                     help="draw each round's synthetic batch with ONE batched "
                          "numpy RNG pass across all clients (host cost per "
@@ -298,18 +365,23 @@ def main(argv=None):
             channels=cfg.image_channels, alpha=args.alpha,
             noise_sigma=args.noise_sigma, seed=args.seed,
         )
-        batches = client_batches(src, per_round_batch,
-                                 steps=rounds, seed=args.seed,
-                                 as_numpy=args.prefetch > 0,
-                                 vectorized=args.vectorized_data)
     else:
         src = MultiTaskLMSource(vocab_size=cfg.vocab_size, num_clients=M,
                                 beta=1.0 - args.alpha, seed=args.seed)
-        batches = client_batches(src, per_round_batch,
-                                 seq_len=args.seq_len, steps=rounds,
-                                 seed=args.seed,
-                                 as_numpy=args.prefetch > 0,
-                                 vectorized=args.vectorized_data)
+    if args.data == "cached":
+        # cached shard READS replace per-round synthesis on the prefetch
+        # thread (data/shards.py); the cache is built once on first use
+        ds = _cached_dataset(args, src, M, is_classifier)
+        batches = client_batches(
+            ds, per_round_batch, steps=rounds,
+            seq_len=None if is_classifier else args.seq_len,
+            seed=args.seed, as_numpy=args.prefetch > 0)
+    else:
+        batches = client_batches(
+            src, per_round_batch, steps=rounds,
+            seq_len=None if is_classifier else args.seq_len,
+            seed=args.seed, as_numpy=args.prefetch > 0,
+            vectorized=args.vectorized_data)
 
     mesh = make_mesh_from_spec(args.mesh)
 

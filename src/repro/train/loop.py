@@ -60,7 +60,10 @@ Checkpoint/resume: pass `init_state=` (a state restored via
 extra) to continue a run mid-stream — the schedule stream, step keys, and
 checkpoint cadence all resume at the absolute round index, so an
 interrupted run's trajectory matches an uninterrupted one (the caller must
-supply the REMAINING round batches).
+supply the REMAINING round batches). Under a topology the checkpoint
+extra also records "sim_time", the simulated clock at the save; pass it
+back as `start_sim_time=` so the resumed history's "sim_time" continues
+the uninterrupted run's cumulative clock instead of restarting at 0.
 
 The round driver is jitted with donate_argnums=(0,) where the backend
 supports donation, so state buffers are reused across rounds instead of
@@ -179,6 +182,7 @@ def train(
     init_state=None,
     start_round: int = 0,
     init_events: Optional[dict] = None,
+    start_sim_time: float = 0.0,
 ):
     """Returns (final_state, history list of metric dicts).
 
@@ -261,7 +265,7 @@ def train(
 
     # simulated wall-clock (core/topology.py): bill each round's traffic
     # events on the explicit deployment graph and accumulate the simulated
-    # clock (counted from THIS train() call) alongside the real one
+    # clock (resuming from start_sim_time) alongside the real one
     topo = tcfg.topology
     round_sim_s = None
     if topo is not None:
@@ -280,7 +284,10 @@ def train(
 
     history = []
     t0 = time.time()
-    sim_time = 0.0
+    # the simulated clock resumes at the checkpoint's value (extra
+    # ["sim_time"]): a resumed run's "sim_time" history must continue the
+    # uninterrupted run's cumulative clock, not restart at 0
+    sim_time = float(start_sim_time)
 
     def _sink(p):
         entry = {"step": p["step"], "round": p["round"],
@@ -324,9 +331,13 @@ def train(
         do_log = ((tcfg.log_every and r % tcfg.log_every == 0)
                   or (i == 0 and start_round == 0) or r == rounds)
         # eval runs on its OWN cadence — never gated behind the log cadence —
-        # and its history entry is recorded unconditionally
+        # and its history entry is recorded unconditionally. The run's LAST
+        # round always evals when eval is configured (matching _train_async
+        # and benchmarks/common.run_algorithm): benchmarks read final
+        # accuracy from the tail entry, which must not depend on whether
+        # the round count happens to land on the cadence
         do_eval = (eval_fn is not None and tcfg.eval_every
-                   and r % tcfg.eval_every == 0)
+                   and (r % tcfg.eval_every == 0 or r == rounds))
         if do_log or do_eval:
             # stamp the elapsed time NOW (when the round was dispatched) —
             # the ring materializes entries up to `prefetch` rounds later
@@ -339,16 +350,22 @@ def train(
                 payload["eval"] = eval_fn(state, next(eval_iter))
             ring.push(payload)
         if tcfg.checkpoint_path and tcfg.checkpoint_every and r % tcfg.checkpoint_every == 0:
+            extra = {"step": r * spr, "round": r}
+            if round_sim_s is not None:
+                # record the simulated clock so a resumed run can continue
+                # it (start_sim_time=) instead of restarting at 0
+                extra["sim_time"] = sim_time
             save_algorithm_state(tcfg.checkpoint_path, alg, state,
-                                 extra={"step": r * spr, "round": r})
+                                 extra=extra)
             ckpt_round = r
     ring.flush()
     if tcfg.checkpoint_path and rounds_done > ckpt_round:
         # always leave a final checkpoint behind (unless the last round's
         # periodic save already wrote this exact state)
-        save_algorithm_state(tcfg.checkpoint_path, alg, state,
-                             extra={"step": rounds_done * spr,
-                                    "round": rounds_done})
+        extra = {"step": rounds_done * spr, "round": rounds_done}
+        if round_sim_s is not None:
+            extra["sim_time"] = sim_time
+        save_algorithm_state(tcfg.checkpoint_path, alg, state, extra=extra)
     return state, history
 
 
@@ -427,10 +444,13 @@ def _train_async(model, tcfg, num_clients, alg, hp, scfg, cap, spr, rounds,
                 _log(e)
         if (tcfg.checkpoint_path and tcfg.checkpoint_every
                 and a_i % tcfg.checkpoint_every == 0):
+            snap = engine.snapshot()
             save_algorithm_state(
                 tcfg.checkpoint_path, alg, engine.state(),
+                # "sim_time" mirrors the sync path's extra (the engine
+                # restores its own clock from the snapshot on resume)
                 extra={"step": a_i * spr, "round": a_i,
-                       "events": engine.snapshot()})
+                       "sim_time": snap["sim_time"], "events": snap})
             ckpt_applies = a_i
     final_state = engine.state()
     if last_ev is not None and (not history
@@ -444,8 +464,9 @@ def _train_async(model, tcfg, num_clients, alg, hp, scfg, cap, spr, rounds,
         history.append(e)
         _log(e)
     if tcfg.checkpoint_path and engine.applies > ckpt_applies:
+        snap = engine.snapshot()
         save_algorithm_state(
             tcfg.checkpoint_path, alg, final_state,
             extra={"step": engine.applies * spr, "round": engine.applies,
-                   "events": engine.snapshot()})
+                   "sim_time": snap["sim_time"], "events": snap})
     return final_state, history

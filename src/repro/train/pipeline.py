@@ -11,12 +11,15 @@ trajectory-identical to synchronous ones — pinned by
 tests/test_pipeline.py):
 
   BackgroundIterator   run an iterator on a daemon thread with a bounded
-                       queue: round-batch generation (numpy RNG work in
-                       data/pipeline.client_batches) and the seeded
-                       schedule draw for round i+1..i+depth happen WHILE
-                       the device runs round i. Exceptions propagate to
-                       the consumer at the matching position; close()
-                       tears the thread down.
+                       queue: round-batch production (numpy RNG synthesis
+                       in data/pipeline.client_batches — or, with a
+                       cached ShardableDataset from data/shards.py, cheap
+                       mmap'd shard READS, which is what keeps this
+                       thread off the critical path at massive M) and the
+                       seeded schedule draw for round i+1..i+depth happen
+                       WHILE the device runs round i. Exceptions
+                       propagate to the consumer at the matching
+                       position; close() tears the thread down.
   pipeline_rounds      zip a batch iterator with a schedule iterator,
                        prefetch `depth` pairs ahead on the background
                        thread, and STAGE each pair onto the device

@@ -63,6 +63,13 @@ def test_throughput_benchmark_quick_end_to_end(tmp_path):
     assert straggle
     assert d["claims"]["prefetch_wins"] == any(
         r["speedup"] > 1.02 for r in straggle)
+    # the cached-vs-synthesized data-path cell (data/shards.py) at M>=256
+    dp = d["data_path"]
+    assert dp["num_clients"] >= 256
+    assert 0 < dp["synthesized_ms_per_round"] < 10_000
+    assert 0 < dp["cached_ms_per_round"] < 10_000
+    assert np.isfinite(dp["speedup"]) and dp["speedup"] > 0
+    assert d["claims"]["cached_data_wins"] == (dp["speedup"] > 1.02)
 
 
 @pytest.mark.slow

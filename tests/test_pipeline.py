@@ -336,3 +336,77 @@ def test_resume_checkpoint_cadence_uses_absolute_rounds(tmp_path):
     # absolute rounds 4 and 6 hit the every-2 cadence; the final write is
     # round 6 = gradient step 12
     assert extra2 == {"step": 12, "round": 6}
+
+
+# ---------------------------------------------------------------------------
+# simulated-clock resume + final-entry eval (regressions)
+# ---------------------------------------------------------------------------
+
+
+def test_sim_time_survives_checkpoint_resume(tmp_path):
+    """Regression: the simulated wall-clock used to restart at 0 after a
+    checkpoint/resume. The checkpoint extra now records "sim_time" (when a
+    topology is billing rounds) and `start_sim_time=` continues it, so the
+    resumed history's cumulative clock matches an uninterrupted run's."""
+    from repro.core.topology import star
+
+    cfg, model, src = _smoke_setup()
+    M = cfg.num_clients
+    topo = star(M)
+    rounds, spr = 6, 1
+    all_batches = list(client_batches(src, 4 * spr, steps=rounds, seed=0,
+                                      as_numpy=True))
+
+    def cfg_for(steps_rounds=rounds, **kw):
+        return TrainConfig(steps=steps_rounds * spr, algorithm="mtsl",
+                           lr=0.1, local_steps=1, log_every=1, seed=0,
+                           prefetch=2, batch_per_client=4, topology=topo,
+                           **kw)
+
+    _, h_ref = train(model, sgd(0.1), iter(all_batches), cfg_for(), M,
+                     log=lambda s: None)
+    assert all("sim_time" in e for e in h_ref)
+    sims = [e["sim_time"] for e in h_ref]
+    assert sims == sorted(sims) and sims[0] > 0
+
+    path = str(tmp_path / "ck.msgpack")
+    train(model, sgd(0.1), iter(all_batches[:3]),
+          cfg_for(steps_rounds=3, checkpoint_path=path), M,
+          log=lambda s: None)
+    restored, _, extra = load_algorithm_state(path, "mtsl")
+    # the clock is part of the checkpoint contract under a topology
+    assert extra["round"] == 3
+    assert extra["sim_time"] == pytest.approx(h_ref[2]["sim_time"])
+    _, h_tail = train(model, sgd(0.1), iter(all_batches[3:]), cfg_for(), M,
+                      log=lambda s: None, init_state=restored,
+                      start_round=extra["round"],
+                      start_sim_time=extra["sim_time"])
+    assert [e["sim_time"] for e in h_tail] == \
+           pytest.approx([e["sim_time"] for e in h_ref[3:]])
+    assert [e["loss"] for e in h_tail] == [e["loss"] for e in h_ref[3:]]
+
+
+def test_checkpoint_extra_has_no_sim_time_without_topology(tmp_path):
+    """Without a topology there is no simulated clock to save — the extra
+    stays exactly {"step", "round"} (the historical contract)."""
+    cfg, model, src = _smoke_setup()
+    path = str(tmp_path / "ck.msgpack")
+    _run("mtsl", model, src, cfg.num_clients, prefetch=0, rounds=2,
+         checkpoint_path=path)
+    _, _, extra = load_algorithm_state(path, "mtsl")
+    assert set(extra) == {"step", "round"}
+
+
+def test_final_round_evals_off_cadence():
+    """Regression: the sync loop's tail history entry skipped eval when the
+    last round did not land on eval_every — benchmarks reading final
+    accuracy from the tail entry saw a missing acc_mtl. The last round now
+    always evals when eval is configured (matching _train_async and
+    benchmarks/common.run_algorithm)."""
+    cfg, model, src = _smoke_setup()
+    tb = _test_batches(cfg, src, per_task=8)
+    _, hist = _run("mtsl", model, src, cfg.num_clients, prefetch=2,
+                   rounds=5, eval_batches=[tb], eval_every=2)
+    eval_rounds = [e["round"] for e in hist if "acc_mtl" in e]
+    assert eval_rounds == [2, 4, 5]
+    assert "acc_mtl" in hist[-1]

@@ -1,0 +1,345 @@
+"""Cached shardable client-data layer (data/shards.py).
+
+The load-bearing invariants, pinned here:
+
+  * resharding invariance — the same (seed, round) yields the same per-
+    GLOBAL-client rows no matter how the client axis is sharded, how the
+    shard files are chunked (shard_size), or whether the store is on disk
+    or in memory;
+  * byte stability — two builds with identical parameters produce
+    identical bytes (the CI cache-build smoke pins the fingerprint);
+  * build-once — an existing cache with the same build parameters is
+    reused untouched, a mismatched one refuses to load silently;
+  * cached == in-memory — training against a CachedClientDataset is
+    bitwise the same trajectory as against its in-memory twin;
+  * Dirichlet(alpha) partitions are deterministic, cover the corpus, and
+    get more label-concentrated as alpha shrinks.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.data import shards
+from repro.data.lm import MultiTaskLMSource
+from repro.data.pipeline import client_batches
+from repro.data.synthetic import MultiTaskImageSource
+
+
+def _image_source(M=5, seed=3):
+    return MultiTaskImageSource(num_classes=M, image_size=6, channels=1,
+                                alpha=0.1, noise_sigma=0.2, seed=seed)
+
+
+def _lm_source(M=4, seed=5):
+    return MultiTaskLMSource(vocab_size=17, num_clients=M, beta=0.7,
+                             seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# build -> read round trip, cached == in-memory
+# ---------------------------------------------------------------------------
+
+
+def test_cache_round_trip_matches_in_memory_image(tmp_path):
+    src = _image_source()
+    shards.build_cache(tmp_path / "c", src, 40, shard_size=16, seed=2)
+    ds = shards.load_cache(tmp_path / "c")
+    mem = shards.materialize_source(src, 40, seed=2)
+    assert ds.kind == "image"
+    assert ds.num_clients_total == mem.num_clients_total == 5
+    for m in range(5):
+        for f in ("image", "label"):
+            np.testing.assert_array_equal(ds.client_array(m, f),
+                                          mem.client_array(m, f))
+    a = ds.round_batch(seed=9, round_idx=4, batch_per_client=7)
+    b = mem.round_batch(seed=9, round_idx=4, batch_per_client=7)
+    assert set(a) == {"image", "label"}
+    assert a["image"].shape == (5, 7, 6, 6)
+    for f in a:
+        np.testing.assert_array_equal(a[f], b[f])
+
+
+def test_cache_round_trip_matches_in_memory_lm(tmp_path):
+    src = _lm_source()
+    shards.build_cache(tmp_path / "c", src, 24, seq_len=12, shard_size=10,
+                       seed=1)
+    ds = shards.load_cache(tmp_path / "c")
+    mem = shards.materialize_source(src, 24, seq_len=12, seed=1)
+    assert ds.kind == "lm" and ds.seq_len == 12
+    a = ds.round_batch(seed=0, round_idx=2, batch_per_client=5, seq_len=8)
+    b = mem.round_batch(seed=0, round_idx=2, batch_per_client=5, seq_len=8)
+    assert a["tokens"].shape == (4, 5, 8)
+    assert a["tokens"].dtype == np.int32
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert int(a["tokens"].max()) < 17
+    with pytest.raises(ValueError, match="exceeds the cached"):
+        ds.round_batch(seed=0, round_idx=0, batch_per_client=2, seq_len=13)
+
+
+def test_load_cache_rejects_non_cache_dir(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        shards.load_cache(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# determinism + byte stability
+# ---------------------------------------------------------------------------
+
+
+def test_round_batch_deterministic_and_round_varying(tmp_path):
+    shards.build_cache(tmp_path / "c", _image_source(), 30, seed=0)
+    ds = shards.load_cache(tmp_path / "c")
+    a = ds.round_batch(seed=4, round_idx=7, batch_per_client=6)
+    b = ds.round_batch(seed=4, round_idx=7, batch_per_client=6)
+    for f in a:
+        np.testing.assert_array_equal(a[f], b[f])
+    c = ds.round_batch(seed=4, round_idx=8, batch_per_client=6)
+    assert not np.array_equal(a["image"], c["image"])
+    d = ds.round_batch(seed=5, round_idx=7, batch_per_client=6)
+    assert not np.array_equal(a["image"], d["image"])
+
+
+def test_two_builds_are_byte_identical(tmp_path):
+    src = _image_source()
+    shards.build_cache(tmp_path / "a", src, 33, shard_size=8, seed=6)
+    shards.build_cache(tmp_path / "b", _image_source(), 33, shard_size=8,
+                       seed=6)
+    assert (shards.cache_fingerprint(tmp_path / "a")
+            == shards.cache_fingerprint(tmp_path / "b"))
+
+
+def test_build_once_reuses_and_rejects_mismatch(tmp_path):
+    src = _image_source()
+    d = tmp_path / "c"
+    m1 = shards.build_cache(d, src, 20, seed=0)
+    fp = shards.cache_fingerprint(d)
+    # same params: reused untouched
+    m2 = shards.build_cache(d, src, 20, seed=0)
+    assert m1 == m2
+    assert shards.cache_fingerprint(d) == fp
+    # different params: refuse rather than silently train on stale data
+    with pytest.raises(ValueError, match="different parameters"):
+        shards.build_cache(d, src, 21, seed=0)
+    with pytest.raises(ValueError, match="different parameters"):
+        shards.build_cache(d, src, 20, seed=1)
+    # overwrite: rebuild under the new params
+    m3 = shards.build_cache(d, src, 21, seed=0, overwrite=True)
+    assert m3["num_examples"] == [21] * 5
+    assert shards.load_cache(d).num_examples(0) == 21
+
+
+# ---------------------------------------------------------------------------
+# resharding invariance
+# ---------------------------------------------------------------------------
+
+
+def _assert_reshard_invariant(ds, seed, round_idx, b, **kw):
+    full = ds.round_batch(seed, round_idx, b, **kw)
+    for count in (2, 3, len(ds.clients)):
+        for f in full:
+            rows = np.empty_like(full[f])
+            for i in range(count):
+                view = ds.shard(i, count)
+                assert view.clients == ds.clients[i::count]
+                part = view.round_batch(seed, round_idx, b, **kw)
+                rows[i::count] = part[f]
+            np.testing.assert_array_equal(rows, full[f])
+
+
+def test_sharded_views_reassemble_the_full_round(tmp_path):
+    shards.build_cache(tmp_path / "c", _image_source(M=7), 25, shard_size=9,
+                       seed=0)
+    _assert_reshard_invariant(shards.load_cache(tmp_path / "c"), 3, 11, 4)
+
+
+def test_shard_size_never_changes_the_stream(tmp_path):
+    src = _lm_source()
+    shards.build_cache(tmp_path / "a", src, 23, seq_len=10, shard_size=23,
+                       seed=4)
+    shards.build_cache(tmp_path / "b", src, 23, seq_len=10, shard_size=5,
+                       seed=4)
+    one = shards.load_cache(tmp_path / "a")  # single-shard fast path
+    many = shards.load_cache(tmp_path / "b")  # multi-shard gather
+    for r in range(3):
+        a = one.round_batch(2, r, 6)
+        b = many.round_batch(2, r, 6)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_shard_index_validation(tmp_path):
+    shards.build_cache(tmp_path / "c", _image_source(), 10, seed=0)
+    ds = shards.load_cache(tmp_path / "c")
+    with pytest.raises(ValueError, match="shard index"):
+        ds.shard(2, 2).shard(5, 3)
+    with pytest.raises(ValueError, match="shard index"):
+        ds.shard(-1, 2)
+
+
+def test_reshard_invariance_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings, st = (hypothesis.given, hypothesis.settings,
+                           hypothesis.strategies)
+
+    src = _image_source(M=6)
+    mem = shards.materialize_source(src, 19, seed=0)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), round_idx=st.integers(0, 10_000),
+           count=st.integers(1, 6), index=st.integers(0, 5),
+           b=st.integers(1, 8))
+    def check(seed, round_idx, count, index, b):
+        index = index % count
+        view = mem.shard(index, count)
+        part = view.round_batch(seed, round_idx, b)
+        # every view row equals the corresponding GLOBAL client's draw,
+        # which is exactly round_indices applied to the full store
+        for row, m in enumerate(view.clients):
+            idx = shards.round_indices(seed, round_idx, m,
+                                       mem.num_examples(m), b)
+            np.testing.assert_array_equal(part["label"][row],
+                                          mem.client_array(m, "label")[idx])
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet partitioning
+# ---------------------------------------------------------------------------
+
+
+def _toy_corpus(N=300, C=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"image": rng.normal(size=(N, 4, 4)).astype(np.float32),
+            "label": rng.integers(0, C, size=N).astype(np.int32)}
+
+
+def test_dirichlet_partition_covers_corpus_and_is_deterministic():
+    corpus = _toy_corpus()
+    parts = shards.dirichlet_partition(corpus["label"], 8, 0.3, seed=1)
+    again = shards.dirichlet_partition(corpus["label"], 8, 0.3, seed=1)
+    assert len(parts) == 8
+    for p, q in zip(parts, again):
+        np.testing.assert_array_equal(p, q)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(300))
+    assert all(len(p) >= 1 for p in parts)
+    other = shards.dirichlet_partition(corpus["label"], 8, 0.3, seed=2)
+    assert any(not np.array_equal(p, q) for p, q in zip(parts, other))
+
+
+def test_dirichlet_alpha_controls_label_concentration():
+    corpus = _toy_corpus(N=1200)
+
+    def mean_top_frac(alpha):
+        parts = shards.dirichlet_partition(corpus["label"], 6, alpha, seed=0)
+        fracs = []
+        for p in parts:
+            counts = np.bincount(corpus["label"][p], minlength=6)
+            fracs.append(counts.max() / max(counts.sum(), 1))
+        return float(np.mean(fracs))
+
+    # small alpha -> concentrated clients; large alpha -> near-uniform
+    # (the >=1-example top-up slightly dilutes the small-alpha extreme, so
+    # the pin is a wide gap plus a loose absolute bound on each end)
+    lo, hi = mean_top_frac(0.05), mean_top_frac(100.0)
+    assert lo > 0.55
+    assert hi < 0.4
+    assert lo > hi + 0.15
+    with pytest.raises(ValueError, match="alpha"):
+        shards.dirichlet_partition(corpus["label"], 6, 0.0)
+
+
+def test_dirichlet_cache_matches_in_memory(tmp_path):
+    corpus = _toy_corpus()
+    shards.build_dirichlet_cache(tmp_path / "c", corpus, 5, 0.4,
+                                 shard_size=13, seed=3)
+    ds = shards.load_cache(tmp_path / "c")
+    mem = shards.materialize_dirichlet(corpus, 5, 0.4, seed=3)
+    assert [ds.num_examples(m) for m in range(5)] == \
+           [mem.num_examples(m) for m in range(5)]
+    for m in range(5):
+        np.testing.assert_array_equal(ds.client_array(m, "label"),
+                                      mem.client_array(m, "label"))
+    a = ds.round_batch(1, 5, 4)
+    b = mem.round_batch(1, 5, 4)
+    for f in a:
+        np.testing.assert_array_equal(a[f], b[f])
+    _assert_reshard_invariant(ds, seed=8, round_idx=2, b=3)
+
+
+def test_dirichlet_build_once_keyed_on_corpus_bytes(tmp_path):
+    corpus = _toy_corpus()
+    shards.build_dirichlet_cache(tmp_path / "c", corpus, 4, 0.5, seed=0)
+    # same corpus + params: reuse
+    shards.build_dirichlet_cache(tmp_path / "c", corpus, 4, 0.5, seed=0)
+    changed = dict(corpus)
+    changed["label"] = corpus["label"].copy()
+    changed["label"][0] = (changed["label"][0] + 1) % 6
+    with pytest.raises(ValueError, match="different parameters"):
+        shards.build_dirichlet_cache(tmp_path / "c", changed, 4, 0.5, seed=0)
+
+
+def test_pooled_corpus_feeds_dirichlet(tmp_path):
+    src = _image_source()
+    corpus = shards.pooled_corpus(src, 90, seed=0)
+    assert corpus["image"].shape[0] == corpus["label"].shape[0] == 90
+    again = shards.pooled_corpus(src, 90, seed=0)
+    np.testing.assert_array_equal(corpus["image"], again["image"])
+    mem = shards.materialize_dirichlet(corpus, 6, 0.2, seed=0)
+    assert sum(mem.num_examples(m) for m in range(6)) == 90
+
+
+# ---------------------------------------------------------------------------
+# pipeline integration: client_batches over a dataset, start_round seek
+# ---------------------------------------------------------------------------
+
+
+def test_client_batches_reads_dataset_and_seeks(tmp_path):
+    src = _image_source()
+    shards.build_cache(tmp_path / "c", src, 30, seed=0)
+    ds = shards.load_cache(tmp_path / "c")
+    full = list(client_batches(ds, 4, steps=6, seed=7, as_numpy=True))
+    assert len(full) == 6 and full[0]["image"].shape == (5, 4, 6, 6)
+    # start_round seeks to the SAME stream position (resume without replay)
+    tail = list(client_batches(ds, 4, steps=2, seed=7, as_numpy=True,
+                               start_round=4))
+    for got, want in zip(tail, full[4:]):
+        for f in got:
+            np.testing.assert_array_equal(got[f], want[f])
+    # synthesis sources are sequential: seeking them is an error, not a
+    # silently different stream
+    with pytest.raises(ValueError, match="start_round"):
+        next(client_batches(src, 4, steps=1, start_round=1))
+
+
+def test_cached_training_matches_in_memory_training(tmp_path):
+    """The golden: a full train() run against the on-disk cache is bitwise
+    the same trajectory as against its in-memory twin."""
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import sgd
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_config("paper-mlp", smoke=True)
+    model = build_model(cfg)
+    M = cfg.num_clients
+    src = MultiTaskImageSource(num_classes=M, image_size=cfg.image_size,
+                               channels=cfg.image_channels, alpha=0.1,
+                               noise_sigma=0.2, seed=0)
+    shards.build_cache(tmp_path / "c", src, 48, seed=0)
+    cached = shards.load_cache(tmp_path / "c")
+    mem = shards.materialize_source(src, 48, seed=0)
+
+    def run(dataset):
+        tcfg = TrainConfig(steps=6, algorithm="mtsl", log_every=1, seed=0)
+        batches = client_batches(dataset, 8, steps=6, seed=0, as_numpy=True)
+        _, history = train(model, sgd(0.1), batches, tcfg, M,
+                           log=lambda s: None)
+        return [e["loss"] for e in history]
+
+    assert run(cached) == run(mem)

