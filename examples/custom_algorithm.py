@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import federation
-from repro.core.algorithms import Algorithm, register_algorithm, split_local_steps
+from repro.core.algorithms import (
+    Algorithm, client_axes_by_keys, register_algorithm, split_local_steps)
 from repro.utils.sharding import strip
 
 # --- the ~30 lines -----------------------------------------------------------
@@ -50,6 +51,11 @@ register_algorithm(Algorithm(
     round_fn=local_round,
     eval_fn=federation.eval_fedavg,  # same {"towers","servers"} state layout
     round_bytes=lambda cfg, M, b, hp, **kw: 0,  # nothing crosses the network
+    # both state components are per-client [M, ...] rows (no averaging
+    # ever mixes them) — declare it so mesh sharding and the event
+    # engine treat every row as client-owned (repro-lint:
+    # registry-contract would flag the replicated init without this)
+    client_axes=client_axes_by_keys("towers", "servers"),
     description="Local-only SGD per client, no communication.",
 ))
 

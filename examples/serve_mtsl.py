@@ -38,12 +38,17 @@ def main():
     engine = ServeEngine(model, params, M,
                          max_len=args.prompt_len + args.new_tokens)
 
+    # distinct fold_in per consumer: reusing one key across draws would
+    # correlate the token/vision/audio streams (repro-lint: prng-key-reuse)
     inputs = {"tokens": jax.random.randint(
-        rng, (M, b, args.prompt_len), 0, cfg.vocab_size)}
+        jax.random.fold_in(rng, 10), (M, b, args.prompt_len), 0,
+        cfg.vocab_size)}
     if cfg.family == "vlm":
-        inputs["vis"] = jax.random.normal(rng, (M, b, cfg.vis_seq, cfg.vis_dim))
+        inputs["vis"] = jax.random.normal(
+            jax.random.fold_in(rng, 11), (M, b, cfg.vis_seq, cfg.vis_dim))
     if cfg.family == "encdec":
-        inputs["frames"] = jax.random.normal(rng, (M, b, cfg.encoder_seq, cfg.d_model))
+        inputs["frames"] = jax.random.normal(
+            jax.random.fold_in(rng, 12), (M, b, cfg.encoder_seq, cfg.d_model))
 
     t0 = time.time()
     out = engine.generate(inputs, args.new_tokens,

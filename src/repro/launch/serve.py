@@ -125,12 +125,15 @@ def main(argv=None):
                     default="continuous")
     ap.add_argument("--bench", action="store_true",
                     help="timed prefill/decode smoke instead of generation")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed: params init, prompts, and the "
+                         "engine's per-request sampling keys")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     M, b = cfg.num_clients, args.batch_per_client
-    rng = jax.random.PRNGKey(0)
+    rng = jax.random.PRNGKey(args.seed)
     if args.checkpoint:
         params = _load_serve_params(args.checkpoint)
     else:
@@ -149,12 +152,18 @@ def main(argv=None):
         return metrics
 
     max_len = args.prompt_len + args.new_tokens
-    engine = ServeEngine(model, params, M, max_len)
-    inputs = {"tokens": jax.random.randint(rng, (M, b, args.prompt_len), 0, cfg.vocab_size)}
+    engine = ServeEngine(model, params, M, max_len, sample_seed=args.seed)
+    # distinct fold_in per consumer: reusing one key across draws would
+    # correlate the token/vision/audio streams (repro-lint: prng-key-reuse)
+    inputs = {"tokens": jax.random.randint(
+        jax.random.fold_in(rng, 10), (M, b, args.prompt_len), 0,
+        cfg.vocab_size)}
     if cfg.family == "vlm":
-        inputs["vis"] = jax.random.normal(rng, (M, b, cfg.vis_seq, cfg.vis_dim))
+        inputs["vis"] = jax.random.normal(
+            jax.random.fold_in(rng, 11), (M, b, cfg.vis_seq, cfg.vis_dim))
     if cfg.family == "encdec":
-        inputs["frames"] = jax.random.normal(rng, (M, b, cfg.encoder_seq, cfg.d_model))
+        inputs["frames"] = jax.random.normal(
+            jax.random.fold_in(rng, 12), (M, b, cfg.encoder_seq, cfg.d_model))
 
     gen = (engine.generate if args.engine == "continuous"
            else engine.generate_sequential)

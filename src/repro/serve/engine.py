@@ -73,11 +73,18 @@ class ServeEngine:
     batched-prefill loop, which stays as the fallback for families without
     chunked prefill (vlm, encdec)."""
 
-    def __init__(self, model: Model, params, num_clients: int, max_len: int):
+    def __init__(self, model: Model, params, num_clients: int, max_len: int,
+                 sample_seed: int = 0):
         self.model = model
         self.params = params
         self.M = num_clients
         self.max_len = max_len
+        # engine-default sampling stream: requests submitted without their
+        # own key sample from fold_in(PRNGKey(sample_seed), request_id), so
+        # one --seed reproduces a whole serve run (launch/serve.py threads
+        # it through; tests/test_serve_continuous.py pins it)
+        self.sample_seed = sample_seed
+        self._sample_rng = jax.random.PRNGKey(sample_seed)
         self._prefill = jax.jit(build_prefill_step(model, num_clients, max_len))
         self._decode = jax.jit(build_decode_step(model, num_clients))
         self._cont = {}  # (b, S) -> ContinuousEngine
@@ -102,7 +109,7 @@ class ServeEngine:
             # chunk = prompt length: whole-prompt extend, one slot per row
             self._cont[key] = ContinuousEngine(
                 self.model, self.params, M, self.max_len,
-                slots=M * b, chunk=S)
+                slots=M * b, chunk=S, rng=self._sample_rng)
         eng = self._cont[key]
         toks = jnp.asarray(prompt)
         for m in range(M):
@@ -111,10 +118,11 @@ class ServeEngine:
                 rkey = None
                 if temperature > 0.0 and rng is not None:
                     rkey = jax.random.fold_in(rng, rid)
+                # rkey=None + temperature>0: the ContinuousEngine derives
+                # fold_in(PRNGKey(sample_seed), id) — seeded, reproducible
                 eng.submit(Request(
                     id=rid, client=m, tokens=np.asarray(toks[m, j]),
-                    new_tokens=new_tokens,
-                    temperature=temperature if rng is not None else 0.0,
+                    new_tokens=new_tokens, temperature=temperature,
                     key=rkey))
         res = eng.run()
         out = np.stack([res[m * b + j] for m in range(M) for j in range(b)])

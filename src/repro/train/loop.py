@@ -283,7 +283,8 @@ def train(
                 round_idx=r, local_steps=spr)
 
     history = []
-    t0 = time.time()
+    # wall-clock is reporting-only (history["time"]), never trajectory
+    t0 = time.time()  # repro-lint: allow(nondeterminism)
     # the simulated clock resumes at the checkpoint's value (extra
     # ["sim_time"]): a resumed run's "sim_time" history must continue the
     # uninterrupted run's cumulative clock, not restart at 0
@@ -343,6 +344,7 @@ def train(
             # the ring materializes entries up to `prefetch` rounds later
             payload = {"metrics": metrics, "step": r * spr, "round": r,
                        "participants": sched.num_participants,
+                       # reporting-only  # repro-lint: allow(nondeterminism)
                        "time": time.time() - t0, "do_log": do_log}
             if round_sim_s is not None:
                 payload["sim_time"] = sim_time
@@ -409,13 +411,15 @@ def _train_async(model, tcfg, num_clients, alg, hp, scfg, cap, spr, rounds,
                             num_rounds=max(rounds - start_disp, 0))
 
     history = []
-    t0 = time.time()
+    # wall-clock is reporting-only (history["time"]), never trajectory
+    t0 = time.time()  # repro-lint: allow(nondeterminism)
     ckpt_applies = engine.applies
     last_ev = None
 
     def _entry(ev):
         e = {"step": ev["applies"] * spr, "round": ev["applies"],
              "loss": float(ev["metrics"]["loss"]),
+             # reporting-only  # repro-lint: allow(nondeterminism)
              "time": time.time() - t0,
              "participants": ev["participants"],
              "sim_time": ev["sim_time"], "staleness": ev["staleness"]}

@@ -1,13 +1,18 @@
-"""Tree hygiene: compiled bytecode must never be committed.
+"""Tree hygiene: committed bytecode, and the repro-lint gate.
 
 PR 3 accidentally committed `__pycache__/*.pyc` files; this pins the
 cleanup (mirrored by a CI step for environments that skip the suite, and
-prevented going forward by .gitignore).
+prevented going forward by .gitignore). PR 10 added the repro-lint
+static-analysis gate: the tree must lint clean beyond the committed
+baseline, and the hot layers (core/, serve/) may never grandfather
+findings into that baseline.
 """
 import pathlib
 import subprocess
+import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
 
 
 def _git_files():
@@ -39,3 +44,28 @@ def test_gitignore_covers_bytecode():
     gi = (REPO / ".gitignore").read_text()
     assert "__pycache__/" in gi
     assert "*.py[cod]" in gi
+
+
+def test_repro_lint_clean_beyond_baseline():
+    """The in-process equivalent of CI's blocking
+    `python -m tools.repro_lint` step: no new findings, no parse errors."""
+    from tools.repro_lint import (
+        baseline_keys, lint_paths, load_baseline)
+
+    findings, errors = lint_paths()
+    assert not errors, errors
+    base = baseline_keys(load_baseline())
+    new = [f for f in findings if f.key() not in base]
+    assert not new, "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}" for f in new)
+
+
+def test_baseline_never_grandfathers_hot_layers():
+    """New code in the hot layers must FIX findings, not baseline them:
+    zero grandfathered entries under src/repro/core/ and
+    src/repro/serve/."""
+    from tools.repro_lint import load_baseline
+
+    hot = [e for e in load_baseline()
+           if e["path"].startswith(("src/repro/core/", "src/repro/serve/"))]
+    assert not hot, f"hot-layer findings grandfathered: {hot}"

@@ -126,6 +126,29 @@ def test_temperature_sampling_reproducible():
 
 
 @pytest.mark.slow
+def test_sample_seed_threads_through_serve_engine():
+    """The PR 10 seed bugfix: ContinuousEngine's engine-default sampling
+    key used to be a hardcoded PRNGKey(0) that launch/serve.py could not
+    vary. ServeEngine(sample_seed=...) (the --seed flag's landing point)
+    must make temperature sampling reproducible per seed — same seed ->
+    identical tokens across engines, different seed -> different draws —
+    WITHOUT per-request keys."""
+    cfg, model, params = _built("mamba2-130m")
+    toks = jax.random.randint(jax.random.PRNGKey(5),
+                              (cfg.num_clients, 2, 8), 0, cfg.vocab_size)
+
+    def run_with(seed):
+        eng = ServeEngine(model, params, cfg.num_clients, MAX_LEN,
+                          sample_seed=seed)
+        return np.asarray(eng.generate({"tokens": toks}, new_tokens=6,
+                                       temperature=0.9))
+
+    a, b, c = run_with(7), run_with(7), run_with(8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.slow
 def test_launch_bench_smoke():
     """launch/serve.py --bench returns the serving metrics for both
     engines, and the continuous arm reports zero decode recompiles."""

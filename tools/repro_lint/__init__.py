@@ -1,0 +1,25 @@
+"""repro-lint: repo-specific static analysis (stdlib ast, no deps).
+
+    python -m tools.repro_lint              # lint the default scope
+    python -m tools.repro_lint --json r.json
+    python -m tools.repro_lint --baseline   # grandfather current findings
+    python -m tools.repro_lint --format     # + the house-format checks
+
+See tools/repro_lint/engine.py for pragmas/baseline semantics and
+tools/repro_lint/rules/ for the rule set.
+"""
+from tools.repro_lint.engine import (  # noqa: F401 — public API re-exports
+    BASELINE_PATH,
+    DEFAULT_SCOPE,
+    Finding,
+    Rule,
+    all_rules,
+    baseline_keys,
+    format_findings,
+    lint_paths,
+    lint_text,
+    load_baseline,
+    rule,
+    write_baseline,
+)
+from tools.repro_lint import rules  # noqa: F401, E402 — registers the rules

@@ -1,0 +1,91 @@
+"""CLI driver: lint, report, baseline, and the unified hygiene gate."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.repro_lint import engine
+from tools.repro_lint import rules as _rules  # noqa: F401 — registration
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="Repo-specific static analysis (stdlib ast; rules in "
+                    "tools/repro_lint/rules/). Exit 0 clean, 1 findings, "
+                    "2 parse errors.")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: %s)"
+                         % " ".join(engine.DEFAULT_SCOPE))
+    ap.add_argument("--baseline", action="store_true",
+                    help="rewrite baseline.json from the current findings "
+                         "(grandfathers them) instead of failing")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="write a JSON report to PATH (or stdout)")
+    ap.add_argument("--format", action="store_true",
+                    help="also run tools/check_format.py's house-format "
+                         "checks through this reporter/exit path")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset to run")
+    args = ap.parse_args(argv)
+
+    subset = None
+    if args.rules:
+        subset = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = sorted(set(subset) - set(engine.all_rules()))
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    findings, errors = engine.lint_paths(args.paths or None, rules=subset)
+    if args.format:
+        findings.extend(engine.format_findings())
+
+    if args.baseline:
+        n = engine.write_baseline(findings)
+        print(f"baseline: wrote {n} entr{'y' if n == 1 else 'ies'} to "
+              f"{engine.BASELINE_PATH.relative_to(engine.REPO)}")
+        return 0
+
+    base = engine.baseline_keys(engine.load_baseline())
+    new = sorted((f for f in findings if f.key() not in base),
+                 key=lambda f: (f.path, f.line, f.rule))
+    grandfathered = len(findings) - len(new)
+
+    # with the JSON report on stdout, the human lines move to stderr so
+    # `--json - | jq` consumes a pure JSON stream
+    human = sys.stderr if args.json == "-" else sys.stdout
+    for f in new:
+        print(f"{f.path}:{f.line}: [{f.rule}] {f.message}", file=human)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+
+    if args.json is not None:
+        report = {
+            "findings": [f.to_json() for f in new],
+            "grandfathered": grandfathered,
+            "errors": errors,
+            "rules": sorted(engine.all_rules()),
+        }
+        text = json.dumps(report, indent=1) + "\n"
+        if args.json == "-":
+            sys.stdout.write(text)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(text)
+
+    if errors:
+        return 2
+    if new:
+        noun = "finding" if len(new) == 1 else "findings"
+        print(f"\nrepro-lint: {len(new)} {noun} "
+              f"({grandfathered} grandfathered)", file=human)
+        return 1
+    print(f"repro-lint: clean ({grandfathered} grandfathered)", file=human)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,247 @@
+"""repro-lint core: file contexts, the rule registry, pragmas, baseline.
+
+A pure-stdlib (``ast``) analysis pass — no third-party deps, so the gate
+runs in the hermetic dev container where even ruff cannot be installed.
+Rules live in ``tools/repro_lint/rules/``; each registers itself with the
+``@rule`` decorator and receives a ``FileContext`` per linted file.
+
+Suppression: ``# repro-lint: allow(<rule>[, <rule2>])`` on the offending
+line, or on a pure-comment line immediately above it (house lines are
+~79 cols, so same-line pragmas often do not fit).
+
+Baseline: ``baseline.json`` next to this module grandfathers existing
+findings — entries match on (rule, path, message), ignoring line numbers,
+so unrelated edits do not un-grandfather a finding. ``--baseline``
+rewrites it from the current tree; it is committed and starts empty.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+REPO = Path(__file__).resolve().parent.parent.parent
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+# tests/ stays out of the default scope: its fixtures transcribe the
+# historical bugs the rules exist to catch (they must keep firing), and
+# compile-count tests legitimately jit inside loops
+DEFAULT_SCOPE = ("src", "tools", "benchmarks", "examples")
+
+PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*allow\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str
+    check: Callable[["FileContext"], List[Finding]]
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def rule(name: str, doc: str):
+    """Register ``fn(ctx) -> list[Finding]`` as the named rule."""
+
+    def deco(fn):
+        _RULES[name] = Rule(name, doc, fn)
+        return fn
+
+    return deco
+
+
+def all_rules() -> Dict[str, Rule]:
+    return dict(_RULES)
+
+
+class FileContext:
+    """One parsed file: AST, source lines, pragmas, import-alias table."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text)
+        self.allow = self._pragmas()
+        self.imports = self._imports()
+
+    def _pragmas(self) -> Dict[int, set]:
+        allow: Dict[int, set] = {}
+        for i, line in enumerate(self.lines, 1):
+            m = PRAGMA_RE.search(line)
+            if not m:
+                continue
+            names = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            allow.setdefault(i, set()).update(names)
+            if line.strip().startswith("#"):
+                # a pure-comment pragma also covers the next source line
+                allow.setdefault(i + 1, set()).update(names)
+        return allow
+
+    def allowed(self, rule_name: str, line: int) -> bool:
+        names = self.allow.get(line, ())
+        return rule_name in names or "*" in names
+
+    def _imports(self) -> Dict[str, str]:
+        """Local alias -> canonical dotted name (np -> numpy,
+        jnp -> jax.numpy, ``from jax import random`` -> jax.random)."""
+        table: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        table[a.asname] = a.name
+                    else:
+                        root = a.name.split(".")[0]
+                        table[root] = root
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative import — not a lint target
+                    continue
+                mod = node.module or ""
+                for a in node.names:
+                    table[a.asname or a.name] = f"{mod}.{a.name}"
+        return table
+
+    def canonical(self, node) -> Optional[str]:
+        """Dotted canonical name of a Name/Attribute chain, resolving
+        import aliases; None for anything more dynamic."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(self.imports.get(node.id, node.id))
+        return ".".join(reversed(parts))
+
+    def import_rooted(self, node) -> bool:
+        """True when the chain's root Name is bound by an import in this
+        file (guards module-named locals, e.g. a variable ``random``)."""
+        while isinstance(node, ast.Attribute):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id in self.imports
+
+
+def scope_functions(tree: ast.Module) -> Iterator[ast.AST]:
+    """Every analysis scope: the module plus each function def."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def scope_nodes(scope: ast.AST) -> Iterator[ast.AST]:
+    """AST nodes whose nearest enclosing scope is ``scope`` (nested
+    function/lambda/class subtrees are excluded)."""
+    stack = list(scope.body)
+    while stack:
+        node = stack.pop(0)
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue  # a nested scope: yield the boundary, don't descend
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def lint_text(text: str, path: str,
+              rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint one file's source under a (possibly virtual) repo-relative
+    path; pragma-suppressed findings are dropped here."""
+    ctx = FileContext(path, text)
+    selected = sorted(rules) if rules is not None else sorted(_RULES)
+    out: List[Finding] = []
+    for name in selected:
+        for f in _RULES[name].check(ctx):
+            if not ctx.allowed(name, f.line):
+                out.append(f)
+    return out
+
+
+def iter_py_files(paths: Optional[Iterable[str]],
+                  root: Path = REPO) -> Iterator[Path]:
+    for p in paths or DEFAULT_SCOPE:
+        pp = Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if pp.is_file() and pp.suffix == ".py":
+            yield pp
+        elif pp.is_dir():
+            for f in sorted(pp.rglob("*.py")):
+                if "__pycache__" in f.parts or ".git" in f.parts:
+                    continue
+                yield f
+
+
+def lint_paths(paths: Optional[Iterable[str]] = None, root: Path = REPO,
+               rules: Optional[Iterable[str]] = None,
+               ) -> tuple[List[Finding], List[str]]:
+    """Lint files/directories (default: the repo scope). Returns
+    (findings, errors); unparseable files land in errors."""
+    findings: List[Finding] = []
+    errors: List[str] = []
+    for f in iter_py_files(paths, root):
+        rel = f.relative_to(root).as_posix() if f.is_relative_to(root) \
+            else f.as_posix()
+        try:
+            text = f.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError) as e:
+            errors.append(f"{rel}: unreadable: {e}")
+            continue
+        try:
+            findings.extend(lint_text(text, rel, rules))
+        except SyntaxError as e:
+            errors.append(f"{rel}: syntax error: {e}")
+    return findings, errors
+
+
+def format_findings(root: Path = REPO) -> List[Finding]:
+    """tools/check_format.py's house-format checks, rendered through this
+    reporter as pseudo-rule ``house-format`` (the --format unification)."""
+    from tools import check_format
+
+    out: List[Finding] = []
+    for path in check_format.tracked_files(root):
+        rel = path.relative_to(root).as_posix()
+        for problem in check_format.check_file(path, fix=False):
+            m = re.match(r"line (\d+):", problem)
+            line = int(m.group(1)) if m else 1
+            out.append(Finding("house-format", rel, line, problem))
+    return out
+
+
+def load_baseline(path: Path = BASELINE_PATH) -> List[dict]:
+    if not path.exists():
+        return []
+    return json.loads(path.read_text()).get("entries", [])
+
+
+def baseline_keys(entries: List[dict]) -> set:
+    return {(e["rule"], e["path"], e["message"]) for e in entries}
+
+
+def write_baseline(findings: List[Finding],
+                   path: Path = BASELINE_PATH) -> int:
+    entries = sorted(
+        {f.key() for f in findings if f.rule != "house-format"})
+    payload = {"entries": [
+        {"rule": r, "path": p, "message": m} for r, p, m in entries]}
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    return len(entries)

@@ -1,0 +1,9 @@
+"""Rule modules register themselves on import (the @rule decorator)."""
+from tools.repro_lint.rules import (  # noqa: F401 — registration imports
+    determinism,
+    donation,
+    hotpath,
+    jit,
+    prng,
+    registry,
+)

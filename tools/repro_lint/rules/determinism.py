@@ -1,0 +1,82 @@
+"""nondeterminism: unseeded randomness / wall-clock reads in src/repro/.
+
+The repo's reproducibility story is seeded end to end: every random
+stream flows from an explicit seed (``np.random.default_rng(seed)`` is
+the deterministic house API — data synthesis, shard draws, schedules) and
+every clock the trajectory depends on is the simulated topology clock.
+This rule flags the escape hatches: wall-clock reads (``time.time`` and
+friends), the legacy global numpy RNG (``np.random.rand``/``seed``/...),
+an ARGLESS ``np.random.default_rng()`` (OS-entropy seeded), and the
+stdlib ``random`` module.
+
+Scope: ``src/repro/`` only. The two launch-side timing harnesses
+(launch/dryrun.py, launch/serve.py) are allowlisted for the clock clause
+— measuring wall time is their purpose; trajectory-relevant code
+(train/loop.py's log timestamps) uses pragmas instead so every use is
+visibly annotated.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.repro_lint.engine import Finding, FileContext, rule
+
+CLOCKS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+}
+# wall-clock allowlist: files whose OUTPUT is a timing measurement
+CLOCK_ALLOWED_FILES = {
+    "src/repro/launch/dryrun.py",
+    "src/repro/launch/serve.py",
+}
+# seeded constructors: fine WITH an explicit seed argument
+SEEDED_CTORS = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                "Philox", "MT19937"}
+
+
+def _in_scope(path: str) -> bool:
+    return path.startswith("src/repro/") or "/src/repro/" in path
+
+
+@rule("nondeterminism",
+      "wall-clock reads, the legacy global numpy RNG, argless "
+      "default_rng(), or stdlib random in src/repro/")
+def check(ctx: FileContext) -> List[Finding]:
+    if not _in_scope(ctx.path):
+        return []
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not ctx.import_rooted(node.func):
+            continue
+        canon = ctx.canonical(node.func)
+        if canon is None:
+            continue
+        if canon in CLOCKS:
+            if ctx.path not in CLOCK_ALLOWED_FILES:
+                findings.append(Finding(
+                    "nondeterminism", ctx.path, node.lineno,
+                    f"{canon}() reads the wall clock — trajectories must "
+                    "depend only on seeds and the simulated topology "
+                    "clock (pragma-annotate intentional timing)"))
+        elif canon.startswith("numpy.random."):
+            attr = canon[len("numpy.random."):]
+            if attr in SEEDED_CTORS:
+                if not node.args and not node.keywords:
+                    findings.append(Finding(
+                        "nondeterminism", ctx.path, node.lineno,
+                        f"numpy.random.{attr}() without a seed draws "
+                        "from OS entropy — pass an explicit seed"))
+            else:
+                findings.append(Finding(
+                    "nondeterminism", ctx.path, node.lineno,
+                    f"numpy.random.{attr} uses the legacy GLOBAL numpy "
+                    "RNG — use a seeded np.random.default_rng(seed) "
+                    "stream instead"))
+        elif canon.startswith("random."):
+            findings.append(Finding(
+                "nondeterminism", ctx.path, node.lineno,
+                f"stdlib {canon} is process-globally seeded — use a "
+                "seeded np.random.default_rng(seed) or jax.random key"))
+    return findings

@@ -1,0 +1,102 @@
+"""donation-use-after-dispatch: reading a buffer after donating it.
+
+The PR 7 bug class: an argument passed to a ``jax.jit(...,
+donate_argnums=...)`` callee is dead the moment the call dispatches, but
+the caller read it afterwards (the round batch's static width, read after
+``shard_round_fn``'s donating round call). The analysis is lexical within
+one function scope: find callables known to donate, then flag any later
+Load of a donated argument name with no intervening rebind.
+
+Known donating wrappers (by name): ``jit_round_fn`` donates argnum 0 and
+``shard_round_fn`` donates argnums (0, 1) — core/algorithms' two round
+compilers. Non-literal ``donate_argnums`` values (e.g. the CPU-gated
+``() if cpu else (1,)``) are skipped: whether they donate is not decidable
+statically.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.repro_lint.engine import (
+    Finding, FileContext, rule, scope_functions, scope_nodes)
+
+KNOWN_DONATING = {"jit_round_fn": (0,), "shard_round_fn": (0, 1)}
+
+
+def _literal_positions(node) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, ast.Tuple):
+        vals = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)):
+                return None
+            vals.append(el.value)
+        return tuple(vals)
+    return None
+
+
+def _donated_positions(ctx: FileContext,
+                       call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Donated argnums of the callable ``call`` evaluates to, or None."""
+    canon = ctx.canonical(call.func)
+    if canon == "jax.jit":
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                return _literal_positions(kw.value)
+        return None
+    if canon and canon.rsplit(".", 1)[-1] in KNOWN_DONATING:
+        return KNOWN_DONATING[canon.rsplit(".", 1)[-1]]
+    return None
+
+
+@rule("donation-use-after-dispatch",
+      "an argument donated to a jitted callee is referenced again in the "
+      "same scope after the dispatching call")
+def check(ctx: FileContext) -> List[Finding]:
+    findings = []
+    for scope in scope_functions(ctx.tree):
+        donating: Dict[str, Tuple[int, ...]] = {}
+        calls: List[Tuple[ast.Call, str]] = []
+        names: List[ast.Name] = []
+        for node in scope_nodes(scope):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                pos = _donated_positions(ctx, node.value)
+                if pos is not None:
+                    donating[node.targets[0].id] = pos
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in donating:
+                calls.append((node, node.func.id))
+            if isinstance(node, ast.Name):
+                names.append(node)
+
+        for call, fname in calls:
+            end = call.end_lineno or call.lineno
+            for pos in donating[fname]:
+                if pos >= len(call.args):
+                    continue
+                arg = call.args[pos]
+                if not isinstance(arg, ast.Name):
+                    continue
+                stores = sorted(n.lineno for n in names if n.id == arg.id
+                                and isinstance(n.ctx, (ast.Store, ast.Del)))
+                loads = sorted(n.lineno for n in names if n.id == arg.id
+                               and isinstance(n.ctx, ast.Load)
+                               and n.lineno > end)
+                for use in loads:
+                    if any(call.lineno <= s <= use for s in stores):
+                        break  # rebound before (or at) the use — dead name
+                    findings.append(Finding(
+                        "donation-use-after-dispatch", ctx.path, use,
+                        f"`{arg.id}` is donated to `{fname}` (argnum "
+                        f"{pos}) at line {call.lineno} and read again "
+                        "afterwards — donated buffers are invalid once "
+                        "the call dispatches"))
+                    break
+    return findings

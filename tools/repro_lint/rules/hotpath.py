@@ -1,0 +1,99 @@
+"""host-sync-in-hot-path: device round-trips inside traced hot regions.
+
+The hot regions are the repo's known dispatch-critical bodies: the nested
+round/step functions built inside ``build_*`` factories (core/federation,
+core/mtsl), the decode/extend step bodies (serve/continuous's ``_build_*``
+methods), and the prefetch-thread code (train/pipeline's
+BackgroundIterator). A ``float()``/``.item()``/``np.asarray``/
+``block_until_ready`` there forces the host to wait on the device —
+exactly the stall class PR 4 hunted out of the async pipeline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from tools.repro_lint.engine import Finding, FileContext, rule
+
+# path suffix -> ("nested-in", function-name patterns) scans the functions
+# DEFINED INSIDE matching factories; ("methods-of", class names) scans the
+# methods of matching classes. A pattern ending in "_" is a prefix.
+HOT_REGIONS = {
+    "src/repro/core/federation.py": ("nested-in", ("build_",)),
+    "src/repro/core/mtsl.py": ("nested-in", ("build_", "make_loss_fn")),
+    "src/repro/serve/continuous.py": ("nested-in", ("_build_",)),
+    "src/repro/train/pipeline.py": ("methods-of", ("BackgroundIterator",)),
+}
+
+SYNC_CANONICAL = {
+    "numpy.asarray": "numpy.asarray (device->host copy)",
+    "numpy.array": "numpy.array (device->host copy)",
+    "jax.device_get": "jax.device_get",
+    "jax.block_until_ready": "jax.block_until_ready",
+}
+
+
+def _match(name: str, patterns: Tuple[str, ...]) -> bool:
+    return any(name.startswith(p) if p.endswith("_") else name == p
+               for p in patterns)
+
+
+def _outermost_nested(fn: ast.AST) -> Iterator[ast.AST]:
+    """Function defs nested directly under ``fn`` (not inside a deeper
+    def — those are covered when the outer nested def is walked)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop(0)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+        else:
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _regions(ctx: FileContext) -> Iterator[Tuple[str, ast.AST]]:
+    for suffix, (kind, patterns) in HOT_REGIONS.items():
+        if not (ctx.path == suffix or ctx.path.endswith("/" + suffix)):
+            continue
+        if kind == "nested-in":
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and _match(node.name, patterns):
+                    for sub in _outermost_nested(node):
+                        yield f"{node.name}.{sub.name}", sub
+        else:  # methods-of
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.ClassDef) \
+                        and _match(node.name, patterns):
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            yield f"{node.name}.{sub.name}", sub
+
+
+def _sync_indicator(ctx: FileContext, call: ast.Call):
+    fn = call.func
+    if isinstance(fn, ast.Name) and fn.id == "float" and len(call.args) == 1:
+        return "float() on a device value"
+    if isinstance(fn, ast.Attribute) and not call.args \
+            and fn.attr in ("item", "block_until_ready"):
+        return f".{fn.attr}()"
+    canon = ctx.canonical(fn)
+    return SYNC_CANONICAL.get(canon)
+
+
+@rule("host-sync-in-hot-path",
+      "float()/.item()/np.asarray/block_until_ready inside the round "
+      "builders, decode/extend step bodies, or prefetch-thread code")
+def check(ctx: FileContext) -> List[Finding]:
+    findings = []
+    for region, fn in _regions(ctx):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            what = _sync_indicator(ctx, node)
+            if what:
+                findings.append(Finding(
+                    "host-sync-in-hot-path", ctx.path, node.lineno,
+                    f"{what} inside hot region `{region}` forces a "
+                    "host/device sync"))
+    return findings

@@ -1,0 +1,223 @@
+"""Tracing-discipline rules: jit-in-loop, traced-assert,
+static-arg-hashability.
+
+* jit-in-loop — ``jax.jit`` applied inside a loop body builds a fresh
+  callable per iteration, so every iteration retraces and recompiles
+  (the jit cache keys on function identity). Hoist the jit out of the
+  loop; the host loop in core/scan_round.py is the repo's reference
+  pattern.
+* traced-assert — a Python ``assert`` on a traced value inside a jitted
+  function raises ConcretizationError (or silently vanishes under -O).
+  Asserts on static metadata (``.shape``/``.ndim``/``.dtype``/``len``/
+  ``isinstance``) trace fine and are not flagged.
+* static-arg-hashability — values bound to ``static_argnums``/
+  ``static_argnames`` positions are jit-cache KEYS and must be hashable;
+  a list/dict/set default or argument there fails at call time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from tools.repro_lint.engine import Finding, FileContext, rule
+
+
+def _is_jax_jit(ctx: FileContext, node) -> bool:
+    return ctx.canonical(node) == "jax.jit"
+
+
+# ---------------------------------------------------------------------------
+# jit-in-loop
+
+
+@rule("jit-in-loop",
+      "jax.jit applied to a freshly built function inside a loop body — "
+      "one retrace/recompile per iteration")
+def check_jit_in_loop(ctx: FileContext) -> List[Finding]:
+    findings = []
+
+    def walk(node, loop_depth):
+        for child in ast.iter_child_nodes(node):
+            depth = loop_depth
+            if isinstance(child, (ast.For, ast.While, ast.AsyncFor)):
+                depth += 1
+            if isinstance(child, ast.Call) and loop_depth \
+                    and _is_jax_jit(ctx, child.func):
+                findings.append(Finding(
+                    "jit-in-loop", ctx.path, child.lineno,
+                    "jax.jit inside a loop body compiles a fresh "
+                    "executable every iteration (the jit cache keys on "
+                    "function identity) — hoist it out of the loop"))
+            walk(child, depth)
+
+    walk(ctx.tree, 0)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# traced-assert
+
+_META_ATTRS = {"shape", "ndim", "dtype", "size"}
+_META_CALLS = {"len", "isinstance", "issubclass", "hasattr"}
+
+
+def _jit_context_functions(ctx: FileContext):
+    """Function defs whose body runs under jax tracing: @jax.jit-decorated
+    (directly or via functools.partial), or passed by name to a jax.jit
+    call somewhere in the file — plus every def nested inside one."""
+    jitted_names: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(ctx, node.func) \
+                and node.args and isinstance(node.args[0], ast.Name):
+            jitted_names.add(node.args[0].id)
+
+    def decorated(fn) -> bool:
+        for dec in fn.decorator_list:
+            if _is_jax_jit(ctx, dec):
+                return True
+            if isinstance(dec, ast.Call):
+                if _is_jax_jit(ctx, dec.func):
+                    return True
+                if ctx.canonical(dec.func) in ("functools.partial",
+                                               "partial") \
+                        and dec.args and _is_jax_jit(ctx, dec.args[0]):
+                    return True
+        return False
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and (decorated(node) or node.name in jitted_names):
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield sub
+
+
+def _metadata_only(test: ast.AST) -> bool:
+    """True when the assert test only inspects static metadata."""
+    saw_value = False
+    for node in ast.walk(test):
+        if isinstance(node, ast.Attribute) and node.attr in _META_ATTRS:
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in _META_CALLS:
+            return True
+        if isinstance(node, ast.Name):
+            saw_value = True
+    return not saw_value  # constant-only test, e.g. `assert False`
+
+
+@rule("traced-assert",
+      "Python assert on a traced value inside a jitted function")
+def check_traced_assert(ctx: FileContext) -> List[Finding]:
+    findings = []
+    seen = set()
+    for fn in _jit_context_functions(ctx):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assert) or node.lineno in seen:
+                continue
+            if _metadata_only(node.test):
+                continue
+            seen.add(node.lineno)
+            findings.append(Finding(
+                "traced-assert", ctx.path, node.lineno,
+                f"assert inside jitted `{fn.name}` runs on tracers — it "
+                "raises ConcretizationError on traced values (and "
+                "vanishes under python -O); use checkify or a masked "
+                "metric instead"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# static-arg-hashability
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def _static_spec(call: ast.Call) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    nums: Tuple[int, ...] = ()
+    names: Tuple[str, ...] = ()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                nums = (v.value,)
+            elif isinstance(v, ast.Tuple) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, int)
+                    for e in v.elts):
+                nums = tuple(e.value for e in v.elts)
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names = (v.value,)
+            elif isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in v.elts):
+                names = tuple(e.value for e in v.elts)
+    return nums, names
+
+
+def _def_for(ctx: FileContext, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+@rule("static-arg-hashability",
+      "non-hashable default/argument in a static_argnums/static_argnames "
+      "position of a jax.jit call")
+def check_static_args(ctx: FileContext) -> List[Finding]:
+    findings = []
+    jitted = {}  # assigned name -> (argnums, argnames)
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_jax_jit(ctx, node.func)):
+            continue
+        nums, names = _static_spec(node)
+        if not nums and not names:
+            continue
+        if node.args and isinstance(node.args[0], ast.Name):
+            fn = _def_for(ctx, node.args[0].id)
+            if fn is not None:
+                params = fn.args.args
+                n_no_default = len(params) - len(fn.args.defaults)
+                for i, p in enumerate(params):
+                    static = i in nums or p.arg in names
+                    if not static or i < n_no_default:
+                        continue
+                    default = fn.args.defaults[i - n_no_default]
+                    if isinstance(default, _UNHASHABLE):
+                        findings.append(Finding(
+                            "static-arg-hashability", ctx.path,
+                            default.lineno,
+                            f"static parameter `{p.arg}` of "
+                            f"`{fn.name}` has a non-hashable default — "
+                            "jit cache keys must be hashable"))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and _is_jax_jit(ctx, node.value.func):
+            nums, names = _static_spec(node.value)
+            if nums or names:
+                jitted[node.targets[0].id] = (nums, names)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in jitted:
+            nums, names = jitted[node.func.id]
+            for i, arg in enumerate(node.args):
+                if i in nums and isinstance(arg, _UNHASHABLE):
+                    findings.append(Finding(
+                        "static-arg-hashability", ctx.path, arg.lineno,
+                        f"non-hashable value passed at static argnum {i} "
+                        f"of `{node.func.id}` — jit cache keys must be "
+                        "hashable"))
+            for kw in node.keywords:
+                if kw.arg in names and isinstance(kw.value, _UNHASHABLE):
+                    findings.append(Finding(
+                        "static-arg-hashability", ctx.path, kw.value.lineno,
+                        f"non-hashable value passed for static argname "
+                        f"`{kw.arg}` of `{node.func.id}` — jit cache keys "
+                        "must be hashable"))
+    return findings

@@ -1,0 +1,98 @@
+"""prng-key-reuse: one PRNG key consumed by two samplers.
+
+The PR 8 ``_sample`` bug class: feeding the same key variable to two
+random draws (or broadcasting one key across vmapped rows with
+``in_axes=(None, ...)``) correlates the draws — every request sampled the
+same token stream. Deriving is fine (``fold_in``/``split`` produce fresh
+keys); the rule fires only when a key NAME reaches two sampler calls with
+no intervening rebind, or when a sampler itself is vmapped with its key
+axis ``None``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.repro_lint.engine import (
+    Finding, FileContext, rule, scope_functions, scope_nodes)
+
+SAMPLERS = {
+    "ball", "bernoulli", "beta", "bits", "categorical", "cauchy",
+    "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "gamma", "geometric", "gumbel", "laplace", "loggamma",
+    "logistic", "maxwell", "multivariate_normal", "normal", "orthogonal",
+    "pareto", "permutation", "poisson", "rademacher", "randint", "rayleigh",
+    "t", "truncated_normal", "uniform", "wald", "weibull_min",
+}
+
+
+def _sampler_name(ctx: FileContext, func) -> str:
+    canon = ctx.canonical(func)
+    if canon and canon.startswith("jax.random."):
+        name = canon[len("jax.random."):]
+        if name in SAMPLERS:
+            return name
+    return ""
+
+
+def _key_arg(call: ast.Call):
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+@rule("prng-key-reuse",
+      "the same PRNG key fed to two random draws without an intervening "
+      "split/fold_in, or one key shared across vmapped sampler rows")
+def check(ctx: FileContext) -> List[Finding]:
+    findings = []
+    for scope in scope_functions(ctx.tree):
+        stores = {}  # name -> sorted store line list
+        consumed = []  # (name, lineno, sampler)
+        for node in scope_nodes(scope):
+            if isinstance(node, ast.Name) \
+                    and isinstance(node.ctx, (ast.Store, ast.Del)):
+                stores.setdefault(node.id, []).append(node.lineno)
+            if not isinstance(node, ast.Call):
+                continue
+            # clause 2: jax.vmap(jax.random.<sampler>, in_axes=(None, ...))
+            if ctx.canonical(node.func) == "jax.vmap" and node.args:
+                sampler = _sampler_name(ctx, node.args[0])
+                in_axes = next((kw.value for kw in node.keywords
+                                if kw.arg == "in_axes"), None)
+                if sampler and isinstance(in_axes, ast.Tuple) \
+                        and in_axes.elts \
+                        and isinstance(in_axes.elts[0], ast.Constant) \
+                        and in_axes.elts[0].value is None:
+                    findings.append(Finding(
+                        "prng-key-reuse", ctx.path, node.lineno,
+                        f"jax.vmap over jax.random.{sampler} with "
+                        "in_axes[0]=None shares ONE key across all rows — "
+                        "same-step draws are identical; fold the row index "
+                        "into the key instead"))
+            sampler = _sampler_name(ctx, node.func)
+            if sampler:
+                key = _key_arg(node)
+                if isinstance(key, ast.Name):
+                    consumed.append((key.id, node.lineno, sampler))
+
+        consumed.sort(key=lambda c: c[1])
+        last = {}  # name -> (line, sampler) of the previous consumption
+        for name, line, sampler in consumed:
+            prev = last.get(name)
+            if prev is not None:
+                prev_line = prev[0]
+                killed = any(prev_line < s <= line
+                             for s in stores.get(name, ()))
+                if not killed:
+                    findings.append(Finding(
+                        "prng-key-reuse", ctx.path, line,
+                        f"key `{name}` already consumed by "
+                        f"jax.random.{prev[1]} at line {prev_line} and "
+                        f"reused by jax.random.{sampler} without "
+                        "split/fold_in — the draws are correlated"))
+            last[name] = (line, sampler)
+    return findings

@@ -1,0 +1,134 @@
+"""registry-contract: register_algorithm call sites supply what the
+loop/checkpoint/event layers require.
+
+An ``Algorithm`` registration is the single integration point the train
+loop, benchmark harness, launcher, checkpointing, mesh sharding, and the
+event engine all drive blindly — a registration missing a required
+builder (or declaring a per-client ``[M, ...]`` state without
+``client_axes``) fails far from the registration site. Checks:
+
+  * the required builders (name/init_state/round_fn/eval_fn/round_bytes)
+    are all supplied;
+  * ``replica_avg_all=True`` requires ``client_axes`` (the multi-server
+    replica merge averages exactly the leaves those marks identify);
+  * ``phases`` requires ``round_fn`` (the sync round must stay the
+    bit-for-bit composition of the declared phases);
+  * heuristic: an ``init_state`` that builds M-replicated state
+    (``stack_towers``/``replicate_tower``/``init_fedavg_params``) without
+    declaring ``client_axes`` — mesh sharding and the event engine's
+    stale-row mixing would silently treat client rows as shared state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.repro_lint.engine import Finding, FileContext, rule
+
+# positional field order of core.algorithms.Algorithm
+FIELD_ORDER = (
+    "name", "init_state", "round_fn", "eval_fn", "round_bytes",
+    "round_events", "steps_per_round", "state_to_tree", "state_from_tree",
+    "serve_params", "uses_optimizer", "donate_state", "client_axes",
+    "phases", "replica_avg_all", "description",
+)
+REQUIRED = ("name", "init_state", "round_fn", "eval_fn", "round_bytes")
+M_REPLICATING = {"stack_towers", "replicate_tower", "init_fedavg_params",
+                 "init_mtsl_params"}
+
+
+def _algorithm_ctor(ctx: FileContext, node: ast.Call) -> Optional[ast.Call]:
+    if not node.args:
+        return None
+    arg = node.args[0]
+    if isinstance(arg, ast.Call):
+        canon = ctx.canonical(arg.func)
+        if canon and canon.rsplit(".", 1)[-1] == "Algorithm":
+            return arg
+    return None
+
+
+def _module_def(ctx: FileContext, name: str):
+    for node in ctx.tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name:
+            return node.value
+    return None
+
+
+def _replicates_clients(ctx: FileContext, init_state) -> bool:
+    """Does the init_state expression (lambda, def, or module-level name)
+    build state with a leading client axis?"""
+    node = init_state
+    if isinstance(node, ast.Name):
+        node = _module_def(ctx, node.id)
+    if node is None:
+        return False
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name in M_REPLICATING:
+            return True
+    return False
+
+
+@rule("registry-contract",
+      "register_algorithm(Algorithm(...)) must supply the required "
+      "builders, and client-replicated state must declare client_axes")
+def check(ctx: FileContext) -> List[Finding]:
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        canon = ctx.canonical(node.func)
+        if not canon or canon.rsplit(".", 1)[-1] != "register_algorithm":
+            continue
+        ctor = _algorithm_ctor(ctx, node)
+        if ctor is None:
+            continue
+        fields = {}
+        for i, arg in enumerate(ctor.args):
+            if i < len(FIELD_ORDER):
+                fields[FIELD_ORDER[i]] = arg
+        for kw in ctor.keywords:
+            if kw.arg is not None:
+                fields[kw.arg] = kw.value
+
+        line = node.lineno
+        for req in REQUIRED:
+            if req not in fields:
+                findings.append(Finding(
+                    "registry-contract", ctx.path, line,
+                    f"Algorithm registration missing required field "
+                    f"`{req}` — every consumer layer (loop, benchmarks, "
+                    "launcher, checkpointing) calls it unconditionally"))
+        has_axes = "client_axes" in fields and not (
+            isinstance(fields["client_axes"], ast.Constant)
+            and fields["client_axes"].value is None)
+        raa = fields.get("replica_avg_all")
+        if isinstance(raa, ast.Constant) and raa.value is True \
+                and not has_axes:
+            findings.append(Finding(
+                "registry-contract", ctx.path, line,
+                "replica_avg_all=True without client_axes — the "
+                "multi-server replica merge needs the client-axis marks "
+                "to know which leaves average"))
+        if "phases" in fields and "round_fn" not in fields:
+            findings.append(Finding(
+                "registry-contract", ctx.path, line,
+                "phases declared without round_fn — the sync round must "
+                "be the bit-for-bit composition of the phase program"))
+        if not has_axes and "init_state" in fields \
+                and _replicates_clients(ctx, fields["init_state"]):
+            findings.append(Finding(
+                "registry-contract", ctx.path, line,
+                "init_state builds [M, ...] client-replicated state but "
+                "client_axes is not declared — mesh sharding and the "
+                "event engine's stale-row mixing need the marks"))
+    return findings
